@@ -1,0 +1,52 @@
+"""Hillclimb driver: re-lower one cell and print the three roofline terms.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --arch qwen3-moe-235b-a22b \
+        --shape train_4k [--multi-pod] [--tag variantB]
+
+Env knobs respected by the model code (see sharding/rules.py):
+    REPRO_MOE_BECD / REPRO_MOE_BECF — MoE buffer shardings
+    REPRO_BLOCKWISE_ATTN=1          — force blockwise attention in train
+    REPRO_NO_TP=1                   — treat 'model' axis as extra DP
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+
+def main() -> None:
+    from repro.launch.dryrun import lower_cell
+    from benchmarks.roofline import roofline_row
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--tag", default="exp")
+    ap.add_argument("--save", default=None,
+                    help="optionally overwrite the dryrun record")
+    args = ap.parse_args()
+
+    rec = lower_cell(args.arch, args.shape, args.multi_pod)
+    row = roofline_row(rec)
+    pd = rec["per_device"]
+    print(f"\n[{args.tag}] {args.arch} × {args.shape} "
+          f"({'mp' if args.multi_pod else 'sp'})")
+    print(f"  compute    {row['compute_s']:.4e} s")
+    print(f"  memory     {row['memory_s']:.4e} s")
+    print(f"  collective {row['collective_s']:.4e} s   "
+          f"({ {k: round(v / 2**30, 1) for k, v in pd['collective_bytes_by_kind'].items()} } GiB)")
+    print(f"  bottleneck {row['bottleneck']}  roofline_frac "
+          f"{row['roofline_fraction']:.4f}  useful {row['useful_ratio']:.2f}")
+    print(f"  mem/dev    {row['mem_gib_per_dev']:.2f} GiB "
+          f"({'fits' if row['fits_16g'] else 'OVER 16G'})  "
+          f"compile {rec['compile_seconds']}s")
+    if args.save:
+        with open(args.save, "w") as f:
+            json.dump(rec, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Roofline analysis (assignment deliverable (g)).
+
+Reads results/dryrun/*.json (written by repro.launch.dryrun) and derives the
+three roofline terms per (arch × shape × mesh):
+
+    compute    = HLO_FLOPs_per_device              / peak_FLOPs_per_chip
+    memory     = HLO_bytes_accessed_per_device     / HBM_bw_per_chip
+    collective = collective_bytes_per_device       / ICI_link_bw
+
+(`cost_analysis()`/`memory_analysis()` on the compiled SPMD executable are
+per-device — verified empirically — so the assignment's global formulation
+`X_global / (chips × peak)` reduces to the per-device form used here.)
+
+Also: MODEL_FLOPS (6·N·D train / 2·N·D prefill / 2·N_active·D decode),
+the MODEL_FLOPS / HLO_FLOPs usefulness ratio, the dominant term, and the
+roofline fraction = ideal-compute-time / dominant-term-time (the score).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+       [--csv out.csv] [--markdown out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12      # TPU v5e bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+
+def model_flops(rec: dict) -> float:
+    from repro.configs import SHAPES
+    shape = SHAPES[rec["shape"]]
+    n = rec["num_params_raw"]
+    n_active = rec["num_params_active"]
+    if rec["kind"] == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if rec["kind"] == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch  # one token per sequence per step
+    return 2.0 * n_active * tokens
+
+
+def chips(rec: dict) -> int:
+    return 512 if rec["mesh"] == "2x16x16" else 256
+
+
+def roofline_row(rec: dict) -> dict:
+    pd = rec["per_device"]
+    compute_s = pd["flops"] / PEAK_FLOPS
+    memory_s = pd["bytes_accessed"] / HBM_BW
+    coll_s = pd["collective_bytes"] / ICI_BW
+    mf = model_flops(rec)
+    hlo_global = pd["flops"] * chips(rec)
+    ideal_s = mf / (chips(rec) * PEAK_FLOPS)
+    dominant_s = max(compute_s, memory_s, coll_s)
+    bottleneck = ("compute" if dominant_s == compute_s else
+                  "memory" if dominant_s == memory_s else "collective")
+    hbm_gib = (pd["argument_bytes"] + pd["temp_bytes"]
+               + pd["output_bytes"] - pd["alias_bytes"]) / 2**30
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "kind": rec["kind"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "bottleneck": bottleneck,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "roofline_fraction": ideal_s / dominant_s if dominant_s else 0.0,
+        "mem_gib_per_dev": hbm_gib,
+        "fits_16g": hbm_gib <= 16.0,
+    }
+
+
+def load_rows(dirpath: str) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            rows.append(roofline_row(json.load(f)))
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "bottleneck | useful | roofline frac | GiB/dev |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | {r['bottleneck']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {r['mem_gib_per_dev']:.2f}{'' if r['fits_16g'] else ' ⚠'} |\n")
+    return "".join(out)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--csv", default=None)
+    ap.add_argument("--markdown", default=None)
+    args = ap.parse_args()
+    rows = load_rows(args.dir)
+    if not rows:
+        print("no dryrun records found", file=sys.stderr)
+        raise SystemExit(1)
+    if args.csv:
+        import csv
+        with open(args.csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0]))
+            w.writeheader()
+            w.writerows(rows)
+    md = to_markdown(rows)
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write(md)
+    print(md)
+    # summary: worst cells per the hillclimb-selection rule
+    sp = [r for r in rows if r["mesh"] == "16x16"]
+    if sp:
+        worst = min(sp, key=lambda r: r["roofline_fraction"])
+        collbound = max(sp, key=lambda r: r["collective_s"]
+                        / max(r["compute_s"], 1e-12))
+        print(f"\nworst roofline fraction: {worst['arch']} × {worst['shape']}"
+              f" ({worst['roofline_fraction']:.3f})")
+        print(f"most collective-bound: {collbound['arch']} × "
+              f"{collbound['shape']} (coll/comp = "
+              f"{collbound['collective_s']/max(collbound['compute_s'],1e-12):.2f})")
+
+
+if __name__ == "__main__":
+    main()

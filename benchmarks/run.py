@@ -1,0 +1,32 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. The roofline deliverable is
+separate (benchmarks/roofline.py) because it consumes dry-run artifacts.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (ablations, fig3_weak_scaling,
+                            fig4_degree_distribution, fig5_communities,
+                            table1_generation_time, table2_path_length)
+    print("name,us_per_call,derived")
+    failures = []
+    for mod in (table1_generation_time, fig3_weak_scaling,
+                fig4_degree_distribution, table2_path_length,
+                fig5_communities, ablations):
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures.append(mod.__name__)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED benchmarks: {failures}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Paper Table 1: graph generation time / rate, PBA vs PK.
+
+The paper: PBA 1B vertices + 5B edges in 12.39 s on 1000 procs
+(~404k edges/s/proc on 2003-era 2.4 GHz Xeons); PK 5.4B edges in 2.53 s
+(~2.13M edges/s/proc). We measure edges/s on this host (XLA:CPU, one
+device) at a local problem size comparable to the paper's per-proc size,
+and report the per-core rate ratio vs the paper.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_jax
+from repro.core import (FactionSpec, PBAConfig, PKConfig, dense_power_seed,
+                        generate_pba_host, generate_pk_host, make_factions)
+
+PAPER_PBA_RATE = 5e9 / 12.39 / 1000    # edges/s/proc
+PAPER_PK_RATE = 5.4e9 / 2.53 / 1000
+
+
+def run() -> list[str]:
+    rows = []
+    # --- PBA: 8 logical procs x 125k vertices x 4 edges = 4M edges ---
+    table = make_factions(8, FactionSpec(4, 2, 4, seed=1))
+    cfg = PBAConfig(vertices_per_proc=125_000, edges_per_vertex=4,
+                    interfaction_prob=0.05, seed=7)
+
+    def gen_pba():
+        edges, _ = generate_pba_host(cfg, table)
+        return edges.src
+
+    t = time_jax(gen_pba, warmup=1, iters=3)
+    edges_n = 8 * cfg.edges_per_proc
+    rate = edges_n / t
+    rows.append(emit("table1_pba_generate", t * 1e6,
+                     f"edges={edges_n};edges_per_s={rate:.3e};"
+                     f"x_paper_proc={rate / PAPER_PBA_RATE:.1f}"))
+
+    # --- PK: seed 500 edges, 4 levels -> 62.5B... use 3 levels = 125M?
+    # keep CPU-friendly: e0=280, L=3 -> 21.9M edges
+    seed = dense_power_seed(20, 14, seed=0)   # n0=20, e0=280
+    kcfg = PKConfig(levels=3, noise=0.0)
+
+    def gen_pk():
+        edges, _ = generate_pk_host(seed, kcfg)
+        return edges.src
+
+    t = time_jax(gen_pk, warmup=1, iters=3)
+    edges_n = seed.num_edges ** 3
+    rate = edges_n / t
+    rows.append(emit("table1_pk_generate", t * 1e6,
+                     f"edges={edges_n};edges_per_s={rate:.3e};"
+                     f"x_paper_proc={rate / PAPER_PK_RATE:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

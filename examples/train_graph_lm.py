@@ -1,0 +1,114 @@
+"""End-to-end driver: generate a scale-free graph → random-walk corpus →
+train an LM on it (the paper's generators as the data-infrastructure tier).
+
+Default preset trains a reduced qwen1.5-family model for a few hundred steps
+on CPU in minutes; --preset 100m builds a ~100M-param config (the assignment
+driver size — same code path, more steps/params):
+
+    PYTHONPATH=src python examples/train_graph_lm.py --steps 200
+    PYTHONPATH=src python examples/train_graph_lm.py --preset 100m --steps 300
+
+Features exercised: WalkCorpus (PBA graph), AdamW + grad accumulation,
+checkpoint every --ckpt-every steps + auto-restart, restart-exact data
+cursor.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.train.checkpoint import (latest_checkpoint, load_checkpoint,
+                                    save_checkpoint)
+from repro.train.data import WalkCorpus, WalkCorpusConfig, batches
+from repro.train.optimizer import (AdamWConfig, init_opt_state,
+                                   opt_state_struct)
+from repro.train.train_step import make_train_step
+
+
+def make_cfg(preset: str):
+    base = get_config("qwen1.5-0.5b")
+    if preset == "tiny":
+        cfg = dataclasses.replace(base.reduced(), vocab_size=4096,
+                                  num_layers=4, d_model=256, d_ff=768,
+                                  num_heads=8, num_kv_heads=8, head_dim=32)
+    elif preset == "100m":
+        # ~100M params: 16L x 768d. Vocab 8192 so a few hundred steps can
+        # visibly learn the graph's transition structure (conditional
+        # entropy ~= ln(avg degree) << unigram entropy).
+        cfg = dataclasses.replace(base, num_layers=16, d_model=768,
+                                  num_heads=12, num_kv_heads=12, head_dim=64,
+                                  d_ff=2048, vocab_size=8192,
+                                  tie_embeddings=True)
+    else:
+        raise ValueError(preset)
+    return cfg
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.preset)
+    model = build_model(cfg, tp=1, compute_dtype=jnp.float32)
+    print(f"model: {cfg.name} ({model.count_params():,} params), "
+          f"preset={args.preset}")
+
+    corpus = WalkCorpus(WalkCorpusConfig(
+        generator="pba", num_vertices=cfg.vocab_size,
+        vocab_size=cfg.vocab_size, seed=0))
+    print(f"corpus: PBA graph, {corpus.n:,} vertices")
+
+    params = model.init(jax.random.key(0))
+    opt = init_opt_state(params)
+    start_step = 0
+
+    ck = latest_checkpoint(args.ckpt_dir)
+    if ck:
+        params, opt, manifest = load_checkpoint(
+            ck, model.param_struct(), opt_state_struct(model.param_struct()))
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+        corpus.restore(manifest["data"])
+        start_step = manifest["step"]
+        print(f"restarted from {ck} at step {start_step}")
+
+    step_fn = jax.jit(make_train_step(
+        model, AdamWConfig(lr=args.lr, warmup_steps=50),
+        ), donate_argnums=(0, 1))
+    it = batches(corpus, args.batch, args.seq, accum=args.accum)
+
+    t0 = time.perf_counter()
+    tokens_done = 0
+    for step in range(start_step, args.steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt, metrics = step_fn(params, opt, b)
+        tokens_done += args.batch * args.seq
+        if (step + 1) % 20 == 0 or step == start_step:
+            dt = time.perf_counter() - t0
+            print(f"step {step + 1:5d} loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"tok/s={tokens_done / dt:.0f}")
+        if (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, step + 1, params, opt,
+                            {"data": corpus.state(), "arch": cfg.name})
+            print(f"  checkpoint @ {step + 1}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Per-architecture configs (assigned pool) + shape registry."""
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, applicable_shapes
+from repro.configs.registry import ARCH_IDS, get_config, all_configs

@@ -1,0 +1,417 @@
+"""Parallel Barabási–Albert (PBA) generator — two-phase preferential attachment.
+
+Faithful JAX/TPU re-derivation of the paper's MPI algorithm (DESIGN.md §2):
+
+  phase 1 (local):  per-processor Pólya urn over *processor ids*, seeded with
+                    the processor's faction members; resolved in O(log E)
+                    vectorized pointer-doubling rounds instead of a serial loop.
+  exchange 1:       dense (P,) counts all_to_all ("how many endpoints I need
+                    from you").
+  phase 2 (local):  per-processor Pólya urn over *local endpoint slots*
+                    (uniform over slots == degree-proportional over vertices),
+                    producing the requested endpoints in requester order.
+  exchange 2:       fixed-capacity (P, C) endpoint all_to_all; overflow slots
+                    are dropped and counted (static shapes — see DESIGN.md).
+  substitution:     each local edge's processor tag is replaced by the next
+                    endpoint received from that processor (occurrence-rank
+                    gather).
+
+Everything is deterministic given (seed, P): all randomness is counter-based
+and keyed by (seed, stream, rank).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import rng as rng_lib
+from repro.core.factions import FactionTable, validate_table
+from repro.core.graph import EdgeList, GenStats
+
+
+@dataclasses.dataclass(frozen=True)
+class PBAConfig:
+    """PBA generation parameters.
+
+    vertices_per_proc: local vertex count V (global = V * P).
+    edges_per_vertex: the BA ``k`` — edges attached per new vertex.
+    interfaction_prob: probability that a phase-1 slot picks a uniformly
+      random processor instead of copying an earlier slot (the paper's
+      inter-faction edges).
+    pair_capacity: static per-(sender, receiver) endpoint budget C. None ->
+      heuristic from faction sizes.
+    total_capacity_factor: phase-2 urn budget as a multiple of E_local.
+    seed: global RNG seed.
+    """
+
+    vertices_per_proc: int
+    edges_per_vertex: int
+    interfaction_prob: float = 0.05
+    pair_capacity: Optional[int] = None
+    # §Perf G1: phase-2 urn budget. Expected requests == E_local; 2x headroom
+    # keeps drops at zero for non-adversarial faction layouts while cutting
+    # the dominant resolve cost ~40% (was 4x — see EXPERIMENTS.md §Perf-Gen).
+    total_capacity_factor: int = 2
+    seed: int = 0
+
+    @property
+    def edges_per_proc(self) -> int:
+        return self.vertices_per_proc * self.edges_per_vertex
+
+
+def default_pair_capacity(edges_per_proc: int, min_s: int) -> int:
+    """Static per-pair capacity heuristic.
+
+    The phase-1 urn is a Pólya urn over ~s initial colors; per-pair load
+    concentrates like E/s with heavy upper tails, so budget a generous
+    multiple. Clipped to E_local (a pair can never need more).
+    """
+    c = 8 * edges_per_proc // max(min_s, 1)
+    return int(min(max(c, 64), edges_per_proc))
+
+
+def resolve_pointers(ptr: jax.Array, terminal: jax.Array,
+                     max_rounds: int = 64) -> jax.Array:
+    """Path-compress ``ptr`` until every entry lands on a terminal slot.
+
+    ``ptr`` points strictly downward (ptr[j] < j for non-terminals) and
+    terminal slots are fixed points, so ``ptr <- ptr[ptr]`` doubles chain
+    progress per round; expected rounds = O(log log-chain) ~ 5-8.
+    """
+
+    def cond(state):
+        i, p = state
+        return (i < max_rounds) & ~jnp.all(terminal[p])
+
+    def body(state):
+        from repro.kernels import ops as kops
+        i, p = state
+        return i + 1, kops.resolve_step(p)
+
+    _, out = jax.lax.while_loop(cond, body, (jnp.int32(0), ptr))
+    return out
+
+
+def occurrence_rank(a: jax.Array) -> jax.Array:
+    """occ[j] = #{j' < j : a[j'] == a[j]} — rank within equal-value group."""
+    n = a.shape[0]
+    idx = jnp.argsort(a, stable=True)
+    sa = a[idx]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), sa[1:] != sa[:-1]])
+    group_start = jax.lax.cummax(jnp.where(is_start, pos, 0))
+    rank_sorted = pos - group_start
+    occ = jnp.zeros((n,), jnp.int32).at[idx].set(rank_sorted)
+    return occ
+
+
+def _phase1(rank, faction_row, s, cfg: PBAConfig, num_procs: int):
+    """Build the local processor-tag list A (E,) and per-target counts (P,)."""
+    e_local = cfg.edges_per_proc
+    max_s = faction_row.shape[0]
+    j = jnp.arange(e_local, dtype=jnp.int32)
+
+    urn_key = rng_lib.device_key(cfg.seed, rng_lib.STREAM_PBA_URN, rank)
+    r = rng_lib.uniform_slots(urn_key, e_local, jnp.maximum(j, 1))  # r_j ~ U[0, j)
+
+    coin_key = rng_lib.device_key(cfg.seed, rng_lib.STREAM_PBA_INTERFACTION_COIN, rank)
+    inter = rng_lib.coin(coin_key, e_local, cfg.interfaction_prob) & (j >= s)
+    proc_key = rng_lib.device_key(cfg.seed, rng_lib.STREAM_PBA_INTERFACTION_PROC, rank)
+    rand_proc = rng_lib.uniform_ints(proc_key, e_local, num_procs)
+
+    seeded = j < s
+    terminal = seeded | inter
+    base = jnp.where(
+        seeded,
+        faction_row[jnp.minimum(j, max_s - 1)],
+        jnp.where(inter, rand_proc, -1),
+    )
+    ptr = jnp.where(terminal, j, r)
+    ptr = resolve_pointers(ptr, terminal)
+    a = base[ptr]
+
+    from repro.kernels import ops as kops
+    counts = kops.histogram(a, num_procs)
+    return a, counts
+
+
+def _phase2(rank, recv_counts, cfg: PBAConfig, pair_capacity: int):
+    """Generate requested endpoints by local preferential attachment.
+
+    Returns out_buf (P, C) of *global* vertex ids; -1 marks unused slots.
+    """
+    e_local = cfg.edges_per_proc
+    k = cfg.edges_per_vertex
+    num_procs = recv_counts.shape[0]
+    t_cap = cfg.total_capacity_factor * e_local
+    pool_n = e_local + t_cap
+
+    # Urn over endpoint slots: first E slots are the k out-edges of each local
+    # vertex (uniform slot == degree-proportional vertex); later slots copy a
+    # uniformly chosen earlier slot (urn growth as endpoints are granted).
+    jj = jnp.arange(pool_n, dtype=jnp.int32)
+    key = rng_lib.device_key(cfg.seed, rng_lib.STREAM_PBA_PHASE2_URN, rank)
+    r = rng_lib.uniform_slots(key, pool_n, jnp.maximum(jj, 1))
+    terminal = jj < e_local
+    ptr = jnp.where(terminal, jj, r)
+    ptr = resolve_pointers(ptr, terminal)
+    local_vertex = (ptr // k).astype(jnp.int32)  # slot -> owning local vertex
+    pool = rank * jnp.int32(cfg.vertices_per_proc) + local_vertex  # global ids
+
+    cc = jnp.minimum(recv_counts, pair_capacity)
+    offsets = jnp.cumsum(cc) - cc  # exclusive prefix
+    c_idx = jnp.arange(pair_capacity, dtype=jnp.int32)
+    flat_idx = offsets[:, None] + c_idx[None, :]
+    valid = (c_idx[None, :] < cc[:, None]) & (flat_idx < t_cap)
+    vals = pool[e_local + jnp.clip(flat_idx, 0, t_cap - 1)]
+    out_buf = jnp.where(valid, vals, -1)
+    granted = valid.sum(dtype=jnp.int32)
+    return out_buf, granted
+
+
+def pba_shard_body(rank, faction_row, s, cfg: PBAConfig, num_procs: int,
+                   pair_capacity: int, axis_name: Optional[str]):
+    """Per-device PBA program. ``axis_name`` None => single-device (P must be 1)."""
+    e_local = cfg.edges_per_proc
+    a, counts = _phase1(rank, faction_row, s, cfg, num_procs)
+
+    if axis_name is not None:
+        recv_counts = jax.lax.all_to_all(counts, axis_name, split_axis=0,
+                                         concat_axis=0, tiled=True)
+    else:
+        recv_counts = counts
+
+    out_buf, granted = _phase2(rank, recv_counts, cfg, pair_capacity)
+
+    if axis_name is not None:
+        in_buf = jax.lax.all_to_all(out_buf, axis_name, split_axis=0,
+                                    concat_axis=0, tiled=True)
+    else:
+        in_buf = out_buf
+
+    occ = occurrence_rank(a)
+    v = in_buf[a, jnp.minimum(occ, pair_capacity - 1)]
+    v = jnp.where(occ < pair_capacity, v, -1)
+
+    j = jnp.arange(e_local, dtype=jnp.int32)
+    u = rank * jnp.int32(cfg.vertices_per_proc) + j // cfg.edges_per_vertex
+    u = jnp.where(v >= 0, u, -1)
+
+    dropped = jnp.sum(v < 0, dtype=jnp.int32)
+    if axis_name is not None:
+        dropped_total = jax.lax.psum(dropped, axis_name)
+    else:
+        dropped_total = dropped
+    return u, v, dropped_total, granted
+
+
+def generate_pba(cfg: PBAConfig, table: FactionTable,
+                 mesh: Optional[Mesh] = None,
+                 axis_name: str = "proc") -> tuple[EdgeList, GenStats]:
+    """Generate a PBA graph on ``mesh`` (1-D over all its devices).
+
+    With mesh=None, runs the P-processor program on however many real devices
+    exist — P == table.num_procs must equal the mesh size. For P logical
+    processors on 1 device (testing), use :func:`generate_pba_host`.
+    """
+    validate_table(table)
+    num_procs = table.num_procs
+    if mesh is None:
+        devs = np.array(jax.devices()[:num_procs])
+        if devs.size != num_procs:
+            raise ValueError(
+                f"need {num_procs} devices, have {len(jax.devices())}; "
+                "use generate_pba_host for logical-P-on-1-device")
+        mesh = Mesh(devs, (axis_name,))
+    pair_capacity = cfg.pair_capacity or default_pair_capacity(
+        cfg.edges_per_proc, int(table.s.min()))
+
+    procs = jnp.asarray(table.procs)
+    s = jnp.asarray(table.s)
+
+    def body(procs_blk, s_blk):
+        rank = jax.lax.axis_index(axis_name)
+        u, v, dropped, granted = pba_shard_body(
+            rank, procs_blk[0], s_blk[0], cfg, num_procs, pair_capacity,
+            axis_name)
+        return u[None], v[None], dropped[None], granted[None]
+
+    u, v, dropped, granted = jax.jit(
+        jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis_name, None), P(axis_name)),
+            out_specs=(P(axis_name, None), P(axis_name, None), P(axis_name),
+                       P(axis_name)),
+            check_vma=False,
+        )
+    )(procs, s)
+
+    n = num_procs * cfg.vertices_per_proc
+    edges = EdgeList(src=u, dst=v, num_vertices=n)
+    requested = num_procs * cfg.edges_per_proc
+    dropped_n = int(dropped[0])
+    stats = GenStats(requested_edges=requested,
+                     emitted_edges=requested - dropped_n,
+                     dropped_edges=dropped_n, num_vertices=n)
+    return edges, stats
+
+
+def generate_pba_sharded(cfg: PBAConfig, table: FactionTable,
+                         mesh: Optional[Mesh] = None,
+                         axis_name: str = "proc") -> tuple[EdgeList, GenStats]:
+    """P *logical* processors sharded over D devices (P = k·D).
+
+    The paper ran 1000 MPI ranks; a pod has 256 chips — production runs
+    several logical processors per chip. Each device vmaps its local block
+    of logical procs; the two exchanges become device-level all_to_alls of
+    the (local, P)-blocked counts/endpoint tensors (a distributed
+    transpose). Bit-identical to generate_pba_host for the same table
+    (tested).
+    """
+    validate_table(table)
+    num_procs = table.num_procs
+    if mesh is None:
+        devs = np.array(jax.devices())
+        mesh = Mesh(devs, (axis_name,))
+    d = int(np.prod(list(mesh.shape.values())))
+    if num_procs % d:
+        raise ValueError(f"logical procs {num_procs} must divide over {d} devices")
+    lp = num_procs // d  # logical procs per device
+    pair_capacity = cfg.pair_capacity or default_pair_capacity(
+        cfg.edges_per_proc, int(table.s.min()))
+
+    procs = jnp.asarray(table.procs).reshape(d, lp, table.max_s)
+    s = jnp.asarray(table.s).reshape(d, lp)
+
+    def body(procs_blk, s_blk):
+        dev = jax.lax.axis_index(axis_name)
+        ranks = dev * lp + jnp.arange(lp, dtype=jnp.int32)
+        a, counts = jax.vmap(
+            lambda r, fr, ss: _phase1(r, fr, ss, cfg, num_procs)
+        )(ranks, procs_blk[0], s_blk[0])                      # (lp, P)
+        # distributed transpose of the counts matrix: (lp, d, lp) -> rows
+        # for MY logical procs from every sender
+        recv = jax.lax.all_to_all(counts.reshape(lp, d, lp), axis_name,
+                                  split_axis=1, concat_axis=0, tiled=False)
+        # recv: (d, lp, lp): [src_dev, src_lp, my_lp] -> (lp, P) per my proc
+        recv_counts = jnp.moveaxis(recv, 2, 0).reshape(lp, num_procs)
+        out_buf, _ = jax.vmap(
+            lambda r, rc: _phase2(r, rc, cfg, pair_capacity)
+        )(ranks, recv_counts)                                 # (lp, P, C)
+        in_buf = jax.lax.all_to_all(
+            out_buf.reshape(lp, d, lp, pair_capacity), axis_name,
+            split_axis=1, concat_axis=0, tiled=False)         # (d, lp, lp, C)
+        in_buf = jnp.moveaxis(in_buf, 2, 0).reshape(
+            lp, num_procs, pair_capacity)                     # per my proc
+        occ = jax.vmap(occurrence_rank)(a)
+        v = jnp.take_along_axis(
+            in_buf.reshape(lp, num_procs * pair_capacity),
+            a * pair_capacity + jnp.minimum(occ, pair_capacity - 1), axis=1)
+        v = jnp.where(occ < pair_capacity, v, -1)
+        e_local = cfg.edges_per_proc
+        j = jnp.arange(e_local, dtype=jnp.int32)
+        u = (ranks[:, None] * cfg.vertices_per_proc
+             + (j // cfg.edges_per_vertex)[None, :])
+        u = jnp.where(v >= 0, u, -1)
+        dropped = jax.lax.psum(jnp.sum(v < 0, dtype=jnp.int32), axis_name)
+        return u[None], v[None], dropped[None]
+
+    u, v, dropped = jax.jit(
+        jax.shard_map(body, mesh=mesh,
+                      in_specs=(P(axis_name, None, None), P(axis_name, None)),
+                      out_specs=(P(axis_name, None, None),
+                                 P(axis_name, None, None), P(axis_name)),
+                      check_vma=False)
+    )(procs, s)
+
+    n = num_procs * cfg.vertices_per_proc
+    requested = num_procs * cfg.edges_per_proc
+    dropped_n = int(dropped[0])
+    return (EdgeList(src=u, dst=v, num_vertices=n),
+            GenStats(requested_edges=requested,
+                     emitted_edges=requested - dropped_n,
+                     dropped_edges=dropped_n, num_vertices=n))
+
+
+def generate_pba_host(cfg: PBAConfig, table: FactionTable) -> tuple[EdgeList, GenStats]:
+    """Run the P-logical-processor PBA program on a single device via vmap.
+
+    Exchanges become transposes of the vmapped batch — bit-identical logical
+    semantics to the distributed run (tested), handy for CPU validation of
+    large P.
+    """
+    validate_table(table)
+    num_procs = table.num_procs
+    pair_capacity = cfg.pair_capacity or default_pair_capacity(
+        cfg.edges_per_proc, int(table.s.min()))
+    procs = jnp.asarray(table.procs)
+    s = jnp.asarray(table.s)
+    ranks = jnp.arange(num_procs, dtype=jnp.int32)
+
+    @jax.jit
+    def run(procs, s, ranks):
+        a, counts = jax.vmap(
+            lambda r, fr, ss: _phase1(r, fr, ss, cfg, num_procs)
+        )(ranks, procs, s)
+        recv_counts = counts.T  # exchange 1
+        out_buf, granted = jax.vmap(
+            lambda r, rc: _phase2(r, rc, cfg, pair_capacity)
+        )(ranks, recv_counts)
+        in_buf = jnp.swapaxes(out_buf, 0, 1)  # exchange 2
+        occ = jax.vmap(occurrence_rank)(a)
+        v = jnp.take_along_axis(
+            in_buf.reshape(num_procs, num_procs * pair_capacity),
+            a * pair_capacity + jnp.minimum(occ, pair_capacity - 1), axis=1)
+        v = jnp.where(occ < pair_capacity, v, -1)
+        e_local = cfg.edges_per_proc
+        j = jnp.arange(e_local, dtype=jnp.int32)
+        u = (ranks[:, None] * cfg.vertices_per_proc
+             + (j // cfg.edges_per_vertex)[None, :])
+        u = jnp.where(v >= 0, u, -1)
+        return u, v, jnp.sum(v < 0)
+
+    u, v, dropped = run(procs, s, ranks)
+    n = num_procs * cfg.vertices_per_proc
+    requested = num_procs * cfg.edges_per_proc
+    dropped_n = int(dropped)
+    return (EdgeList(src=u, dst=v, num_vertices=n),
+            GenStats(requested_edges=requested,
+                     emitted_edges=requested - dropped_n,
+                     dropped_edges=dropped_n, num_vertices=n))
+
+
+def serial_ba_reference(num_vertices: int, k: int, seed: int = 0) -> EdgeList:
+    """Classic serial BA via the uniform-edge-endpoint urn (oracle for tests).
+
+    Pure numpy, sequential — the ground truth the parallel algorithm
+    approximates in the P=1 limit.
+    """
+    rng = np.random.default_rng(seed)
+    e = num_vertices * k
+    src = np.empty(e, np.int64)
+    dst = np.empty(e, np.int64)
+    # endpoint slot pool: 2 slots per edge
+    pool = np.empty(2 * e, np.int64)
+    n_slots = 0
+    for v_new in range(num_vertices):
+        for _ in range(k):
+            i = v_new * k + (_)
+            src[i] = v_new
+            if n_slots == 0:
+                tgt = 0
+            else:
+                tgt = pool[rng.integers(0, n_slots)]
+            dst[i] = tgt
+            pool[n_slots] = v_new
+            pool[n_slots + 1] = tgt
+            n_slots += 2
+    return EdgeList(src=jnp.asarray(src, jnp.int32),
+                    dst=jnp.asarray(dst, jnp.int32),
+                    num_vertices=num_vertices)

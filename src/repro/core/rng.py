@@ -1,0 +1,57 @@
+"""Counter-based parallel RNG for the graph generators.
+
+Every random draw in the generators is keyed by ``(seed, stream, rank)`` so
+that generation is
+
+  * deterministic given ``(seed, P)`` — required for checkpoint/restart,
+  * independent across devices without communication,
+  * re-partitionable: a device's draws depend only on its *rank*, so elastic
+    re-partitioning re-derives the same graph for the same logical partition.
+
+Streams are small integers namespacing independent uses (phase-1 urn draws,
+inter-faction coin flips, phase-2 urn draws, PK digit noise, ...).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Stream ids (namespaces). Keep stable: checkpoints reference them.
+STREAM_PBA_URN = 0
+STREAM_PBA_INTERFACTION_COIN = 1
+STREAM_PBA_INTERFACTION_PROC = 2
+STREAM_PBA_PHASE2_URN = 3
+STREAM_PK_NOISE_COIN = 4
+STREAM_PK_NOISE_DIGIT = 5
+STREAM_PK_XOR = 6
+STREAM_ANALYSIS = 7
+STREAM_DATA_WALKS = 8
+
+
+def device_key(seed, stream: int, rank):
+    """Key for ``rank``'s draws in ``stream``. All args may be traced."""
+    key = jax.random.key(seed) if isinstance(seed, int) else seed
+    key = jax.random.fold_in(key, stream)
+    return jax.random.fold_in(key, rank)
+
+
+def uniform_slots(key, n: int, bounds):
+    """Draw ``r_j ~ U[0, bounds_j)`` for j in [0, n), vectorized.
+
+    ``bounds`` is an int32 array of per-slot exclusive upper bounds (>= 1).
+    Uses 32-bit draws; modulo bias is < 2**-20 for bounds < 2**11 and
+    irrelevant for graph statistics (documented).
+    """
+    bits = jax.random.bits(key, (n,), dtype=jnp.uint32)
+    return (bits % bounds.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def coin(key, n: int, prob: float):
+    """Bernoulli(prob) coin flips as bool (n,)."""
+    return jax.random.uniform(key, (n,)) < prob
+
+
+def uniform_ints(key, n: int, upper):
+    """Uniform int32 in [0, upper) — scalar upper (may be traced)."""
+    bits = jax.random.bits(key, (n,), dtype=jnp.uint32)
+    return (bits % jnp.uint32(upper)).astype(jnp.int32)

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel module provides a pl.pallas_call with explicit BlockSpec VMEM
+tiling; ops.py holds the jitted dispatch wrappers; ref.py the pure-jnp
+oracles that tests sweep against.
+"""

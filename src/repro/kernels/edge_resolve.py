@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: one pointer-doubling pass for PBA urn resolution.
+
+ptr'[j] = ptr[ptr[j]] — a full-array dynamic gather. The source array stays
+VMEM-resident (un-blocked spec) while destinations are gridded; the gather is
+expressed as jnp.take, which Mosaic lowers to a dynamic gather on current
+TPU toolchains. VMEM bounds the per-call size to ~2M int32 entries; the ops.py
+wrapper asserts this and the PBA resolver chunks larger urns hierarchically.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 8 * 128
+MAX_VMEM_ENTRIES = 2 * 1024 * 1024  # 8 MiB of int32 for the resident source
+
+
+def _resolve_kernel(src_ref, idx_ref, out_ref):
+    idx = idx_ref[...]                    # (1, BLOCK) destinations' pointers
+    src = src_ref[...].reshape(-1)        # full pointer array
+    out_ref[...] = jnp.take(src, idx, axis=0, mode="clip")
+
+
+def resolve_step_pallas(ptr: jax.Array, interpret: bool = True) -> jax.Array:
+    """One ptr[ptr] pass. ptr: (m,) int32 with 0 <= ptr[j] < m."""
+    m = ptr.shape[0]
+    if m > MAX_VMEM_ENTRIES:
+        raise ValueError(f"resolve_step kernel supports m <= {MAX_VMEM_ENTRIES}")
+    m_pad = -(-m // BLOCK) * BLOCK
+    p = jnp.pad(ptr, (0, m_pad - m)).reshape(1, m_pad)
+    out = pl.pallas_call(
+        _resolve_kernel,
+        grid=(m_pad // BLOCK,),
+        in_specs=[
+            pl.BlockSpec((1, m_pad), lambda i: (0, 0)),   # resident source
+            pl.BlockSpec((1, BLOCK), lambda i: (0, i)),   # destination block
+        ],
+        out_specs=pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, m_pad), jnp.int32),
+        interpret=interpret,
+    )(p, p)
+    return out.reshape(-1)[:m]

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: Kronecker meta-edge expansion (the PK inner loop).
+
+Tiling: edge indices are reshaped to (rows, 128) int32 and gridded in row
+blocks of 8 — one (8, 128) int32 VREG tile per step, VMEM-resident. The seed
+endpoint tables (e0 <= ~1k entries) ride along replicated in VMEM; gathers are
+realized as one-hot × table matmuls so the kernel needs no dynamic-gather
+support from Mosaic (and they hit the MXU on real hardware).
+
+The per-device range-start digits (L,) are precomputed on host (exact python
+ints, DESIGN.md §2) so all in-kernel arithmetic is int32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 8
+LANES = 128
+
+
+def _onehot_lookup(digits, table):
+    """table[digits] via one-hot matmul. digits (r, c) int32, table (e0,)."""
+    e0 = table.shape[0]
+    oh = (digits[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, digits.shape + (e0,), len(digits.shape))).astype(jnp.float32)
+    vals = oh @ table.astype(jnp.float32)  # (r, c)
+    return vals.astype(jnp.int32)
+
+
+def _expand_kernel(t_ref, base_ref, su_ref, sv_ref, u_ref, v_ref,
+                   *, n0: int, e0: int, levels: int,
+                   flip_ref=None, redraw_ref=None):
+    t = t_ref[...]  # (BLOCK_ROWS, LANES) int32 local edge offsets
+
+    # Base-e0 digit extraction (LSB first), static loop over levels.
+    digits = []
+    rem = t
+    for _ in range(levels):
+        digits.append(rem % e0)
+        rem = rem // e0
+
+    # Mixed-radix carry add with the host-decomposed range start.
+    carry = jnp.zeros_like(t)
+    summed = []
+    for i in range(levels):
+        row = digits[i] + base_ref[levels - 1 - i] + carry
+        c = (row >= e0).astype(jnp.int32)
+        summed.append(row - c * e0)
+        carry = c
+    digits_msb = summed[::-1]
+
+    if flip_ref is not None:
+        for i in range(levels):
+            digits_msb[i] = jnp.where(flip_ref[i], redraw_ref[i], digits_msb[i])
+
+    su = su_ref[...]
+    sv = sv_ref[...]
+    u = jnp.zeros_like(t)
+    v = jnp.zeros_like(t)
+    for i in range(levels):
+        u = u * n0 + _onehot_lookup(digits_msb[i], su)
+        v = v * n0 + _onehot_lookup(digits_msb[i], sv)
+    u_ref[...] = u
+    v_ref[...] = v
+
+
+def pk_expand_pallas(t_local: jax.Array, base_digits: jax.Array,
+                     seed_u: jax.Array, seed_v: jax.Array,
+                     n0: int, e0: int, levels: int,
+                     flip: jax.Array | None = None,
+                     redraw: jax.Array | None = None,
+                     interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Expand (m,) local edge indices; m is padded to a (rows, 128) layout."""
+    m = t_local.shape[0]
+    tile = BLOCK_ROWS * LANES
+    m_pad = -(-m // tile) * tile
+    t2 = jnp.pad(t_local, (0, m_pad - m)).reshape(m_pad // LANES, LANES)
+    rows = t2.shape[0]
+    grid = (rows // BLOCK_ROWS,)
+
+    row_spec = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+    in_specs = [row_spec, full(base_digits.shape), full(seed_u.shape),
+                full(seed_v.shape)]
+    args = [t2, base_digits, seed_u, seed_v]
+    if flip is not None:
+        f2 = jnp.pad(flip, ((0, 0), (0, m_pad - m))).reshape(
+            levels, m_pad // LANES, LANES)
+        r2 = jnp.pad(redraw, ((0, 0), (0, m_pad - m))).reshape(
+            levels, m_pad // LANES, LANES)
+        noise_spec = pl.BlockSpec((levels, BLOCK_ROWS, LANES),
+                                  lambda i: (0, i, 0))
+        in_specs += [noise_spec, noise_spec]
+        args += [f2, r2]
+        kern = functools.partial(_noise_wrapper, n0=n0, e0=e0, levels=levels)
+    else:
+        kern = functools.partial(_expand_kernel, n0=n0, e0=e0, levels=levels)
+
+    u2, v2 = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(row_spec, row_spec),
+        out_shape=(jax.ShapeDtypeStruct(t2.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(t2.shape, jnp.int32)),
+        interpret=interpret,
+    )(*args)
+    return u2.reshape(-1)[:m], v2.reshape(-1)[:m]
+
+
+def _noise_wrapper(t_ref, base_ref, su_ref, sv_ref, flip_ref, redraw_ref,
+                   u_ref, v_ref, *, n0, e0, levels):
+    _expand_kernel(t_ref, base_ref, su_ref, sv_ref, u_ref, v_ref,
+                   n0=n0, e0=e0, levels=levels,
+                   flip_ref=flip_ref, redraw_ref=redraw_ref)

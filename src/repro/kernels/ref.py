@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-ref; the core library
+falls back to these on CPU where interpret-mode Pallas would only add Python
+overhead.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pk_expand_ref(t_local: jax.Array, base_digits: jax.Array,
+                  seed_u: jax.Array, seed_v: jax.Array,
+                  n0: int, e0: int, levels: int,
+                  flip: jax.Array | None = None,
+                  redraw: jax.Array | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Mixed-radix Kronecker edge expansion (see core/pk.py for the math).
+
+    flip/redraw: optional (levels, m) noise tensors (bool / int32 digits).
+    """
+    m = t_local.shape[0]
+    digs = []
+    rem = t_local
+    for _ in range(levels):
+        digs.append(rem % e0)
+        rem = rem // e0
+    local_digits = jnp.stack(digs, axis=0)          # (L, m) LSB first
+    total = local_digits + jnp.flip(base_digits, 0)[:, None]
+
+    carry = jnp.zeros((m,), jnp.int32)
+    out = []
+    for i in range(levels):
+        row = total[i] + carry
+        carry = (row >= e0).astype(jnp.int32)
+        out.append(row - carry * e0)
+    digits = jnp.stack(out[::-1], axis=0)           # (L, m) MSB first
+
+    if flip is not None:
+        digits = jnp.where(flip, redraw, digits)
+
+    u = jnp.zeros((m,), jnp.int32)
+    v = jnp.zeros((m,), jnp.int32)
+    for i in range(levels):
+        u = u * n0 + seed_u[digits[i]]
+        v = v * n0 + seed_v[digits[i]]
+    return u, v
+
+
+def histogram_ref(values: jax.Array, num_bins: int) -> jax.Array:
+    """Bincount of int32 values in [0, num_bins); out-of-range ignored."""
+    v = values.reshape(-1)
+    ok = (v >= 0) & (v < num_bins)
+    v = jnp.where(ok, v, num_bins)
+    return jnp.zeros((num_bins + 1,), jnp.int32).at[v].add(1)[:num_bins]
+
+
+def resolve_step_ref(ptr: jax.Array) -> jax.Array:
+    """One pointer-doubling pass: ptr'[j] = ptr[ptr[j]]."""
+    return ptr[ptr]

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import (jax locks device count on first init).
+
+DOC = """Multi-pod dry-run (assignment deliverable (e)).
+
+For every (architecture × applicable input shape) cell, on the single-pod
+16×16 mesh and the 2×16×16 multi-pod mesh:
+
+    lowered  = jax.jit(step, in_shardings=..., out_shardings=...)\
+                   .lower(**input_specs(arch, shape))
+    compiled = lowered.compile()
+    record(compiled.memory_analysis(), compiled.cost_analysis(),
+           collective bytes parsed from the optimized HLO)
+
+Train cells lower the full AdamW train step (grad-accum scan + remat);
+prefill/decode cells lower the serving steps with production cache
+shardings. Results stream into results/dryrun/<cell>.json — the roofline
+table (deliverable (g)) reads from there.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--multi-pod {0,1,both}] [--out results/dryrun]
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable_shapes, get_config, ARCH_IDS
+from repro.launch.hlo_stats import collect_collective_stats, collect_hlo_costs
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.serve.serve_step import (cache_shardings, make_serve_fns,
+                                    prefill_input_structs)
+from repro.sharding.rules import make_rules
+from repro.train.optimizer import AdamWConfig, opt_state_struct
+from repro.train.train_step import (batch_shardings, batch_struct,
+                                    make_train_step)
+
+TP = 16
+
+# grad-accumulation per arch (keeps per-microbatch activations bounded);
+# keyed by d_model scale.
+def accum_steps(cfg, global_batch: int, dp: int) -> int:
+    # §Perf L2: FSDP weight-gather volume scales with accum, so prefer the
+    # largest microbatch that FITS. Collective-bound MoE gets the largest
+    # (4 seqs/dev: llama4 collective −31%); big dense models keep 2/dev
+    # (memory headroom, phi3-medium fits at 5.7 GiB vs 17.6); SSD's
+    # intra-chunk quadratic tensors want 4/dev.
+    per_dev = max(global_batch // dp, 1)
+    if cfg.moe:
+        # L2 on a full pod; on multi-pod the 16 GiB fit constraint binds
+        target = 4 if per_dev >= 16 else 2
+    elif cfg.ssm_state:
+        target = 4
+    elif cfg.d_model >= 4096:
+        target = 2
+    else:
+        target = 8
+    accum = max(per_dev // target, 1)
+    while global_batch % (accum * dp) and accum > 1:
+        accum -= 1
+    return accum
+
+
+def _param_shardings(rules, model):
+    return rules.param_shardings(model.param_specs())
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # §Perf Q1: small dense models train fastest with the 'model' axis used
+    # as extra data parallelism (TP-16 activation collectives dominate
+    # otherwise: 10.7x collective cut on qwen1.5). Requires one sequence
+    # per device (else per-device activations overflow — §Perf Q1b) and
+    # ZeRO over both axes for the optimizer state. Env-overridable.
+    chips = 512 if multi_pod else 256
+    no_tp_default = (shape.kind == "train" and not cfg.moe
+                     and cfg.family != "audio"  # enc-dec: 2 activation stacks
+                     and not cfg.ssm_state      # SSD chunk tensors per seq
+                     and cfg.num_params() < 2_000_000_000
+                     and shape.global_batch % chips == 0)
+    no_tp = {"1": True, "0": False}.get(os.environ.get("REPRO_NO_TP", ""),
+                                        no_tp_default)
+    model = build_model(cfg, tp=1 if no_tp else TP,
+                        compute_dtype=jnp.bfloat16)
+    dp = int(mesh.shape.get("pod", 1)) * int(mesh.shape["data"])
+    if no_tp:
+        dp *= int(mesh.shape["model"])
+    rules = make_rules(mesh, shape.kind, shape.global_batch,
+                       kv_sharded=model.kv_sharded, no_tp=no_tp)
+
+    p_specs = model.param_specs()
+    p_struct = model.param_struct()
+    p_sh = rules.param_shardings(p_specs)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        accum = int(os.environ.get("REPRO_ACCUM", "0")) or accum_steps(
+            cfg, shape.global_batch, dp)
+        step = make_train_step(model, AdamWConfig(), rules)
+        o_struct = opt_state_struct(p_struct)
+        o_sh = {"m": p_sh, "v": p_sh,
+                "step": NamedSharding(mesh, P())}
+        b_struct = batch_struct(model, shape.global_batch, shape.seq_len,
+                                accum)
+        b_sh = batch_shardings(rules, b_struct)
+        metr_sh = {"grad_norm": NamedSharding(mesh, P()),
+                   "lr": NamedSharding(mesh, P()),
+                   "loss": NamedSharding(mesh, P())}
+        jitted = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                         out_shardings=(p_sh, o_sh, metr_sh),
+                         donate_argnums=(0, 1))
+        with mesh:
+            lowered = jitted.lower(p_struct, o_struct, b_struct)
+            compiled = lowered.compile()
+        extra = {"accum_steps": accum}
+    elif shape.kind == "prefill":
+        prefill, _ = make_serve_fns(model, rules, max_len=shape.seq_len)
+        b_struct = prefill_input_structs(model, shape.global_batch,
+                                         shape.seq_len)
+        b_sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(
+                mesh, P(rules.batch_axes or None,
+                        *([None] * (len(s.shape) - 1)))), b_struct)
+        c_struct = model.cache_structs(shape.global_batch, shape.seq_len)
+        c_sh = cache_shardings(rules, c_struct)
+        logits_sh = NamedSharding(mesh, P(rules.batch_axes or None, None,
+                                          "model"))
+        jitted = jax.jit(prefill, in_shardings=(p_sh, b_sh),
+                         out_shardings=(logits_sh, c_sh))
+        with mesh:
+            lowered = jitted.lower(p_struct, b_struct)
+            compiled = lowered.compile()
+        extra = {}
+    else:  # decode
+        _, decode = make_serve_fns(model, rules)
+        c_struct = model.cache_structs(shape.global_batch, shape.seq_len)
+        c_sh = cache_shardings(rules, c_struct)
+        tok_struct = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tok_sh = NamedSharding(mesh, P(rules.batch_axes or None, None))
+        logits_sh = NamedSharding(mesh, P(rules.batch_axes or None, None,
+                                          "model"))
+        jitted = jax.jit(decode, in_shardings=(p_sh, tok_sh, c_sh, None),
+                         out_shardings=(logits_sh, c_sh),
+                         donate_argnums=(2,))
+        with mesh:
+            lowered = jitted.lower(p_struct, tok_struct, c_struct,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+            compiled = lowered.compile()
+        extra = {}
+
+    compile_s = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    costs = collect_hlo_costs(hlo)  # trip-aware (scan bodies x trip count)
+    coll = costs.collective
+    if os.environ.get("REPRO_SAVE_HLO", "1") == "1":
+        import gzip
+        hdir = os.path.join(os.environ.get("REPRO_HLO_DIR", "results/hlo"))
+        os.makedirs(hdir, exist_ok=True)
+        tag = f"{arch_id}__{shape_name}__{'mp' if multi_pod else 'sp'}"
+        with gzip.open(os.path.join(hdir, tag + ".hlo.gz"), "wt") as f:
+            f.write(hlo)
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "compile_seconds": round(compile_s, 2),
+        "num_params": model.count_params(),
+        "num_params_raw": model.raw_cfg.num_params(),
+        "num_params_active": model.raw_cfg.num_active_params(),
+        "per_device": {
+            "flops": costs.flops,
+            "bytes_accessed": costs.hbm_bytes,
+            "flops_xla_1trip": cost.get("flops", 0.0),
+            "bytes_xla_1trip": cost.get("bytes accessed", 0.0),
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "collective_bytes": coll.total_bytes,
+            "collective_bytes_by_kind": coll.bytes_by_kind,
+            "collective_count_by_kind": coll.count_by_kind,
+            "ambiguous_loops": coll.ambiguous_loops,
+        },
+        **extra,
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", default="both", choices=["0", "1", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    assert len(jax.devices()) == 512, "dryrun requires 512 host devices"
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    pods = {"0": [False], "1": [True], "both": [False, True]}[args.multi_pod]
+
+    failures = []
+    for arch_id in archs:
+        cfg = get_config(arch_id)
+        shapes = ([args.shape] if args.shape else applicable_shapes(cfg))
+        for shape_name in shapes:
+            for mp in pods:
+                tag = f"{arch_id}__{shape_name}__{'mp' if mp else 'sp'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                print(f"[lower] {tag} ...", flush=True)
+                try:
+                    rec = lower_cell(arch_id, shape_name, mp)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=2)
+                    pd = rec["per_device"]
+                    print(f"[ok] {tag}: compile={rec['compile_seconds']}s "
+                          f"flops/dev={pd['flops']:.3e} "
+                          f"temp/dev={pd['temp_bytes']/2**30:.2f}GiB "
+                          f"coll/dev={pd['collective_bytes']/2**30:.3f}GiB",
+                          flush=True)
+                except Exception as e:  # noqa: BLE001 - record and continue
+                    failures.append(tag)
+                    with open(path + ".err", "w") as f:
+                        f.write(traceback.format_exc())
+                    print(f"[FAIL] {tag}: {type(e).__name__}: {e}",
+                          flush=True)
+    print(f"\ndone. failures: {failures if failures else 'none'}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

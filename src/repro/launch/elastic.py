@@ -1,0 +1,74 @@
+"""Elastic scaling + failure handling policies (DESIGN.md §6).
+
+The mechanisms here are deliberately *stateless*: both generators and the
+training loop key every random draw and partition boundary off (seed, rank,
+step), so surviving a failure or changing the device count is a matter of
+recomputing the partition table — no data movement, no coordinator state.
+
+* Generators: an edge-index range per device (PK) or a (vertices, factions)
+  block per device (PBA). ``repartition`` maps any P -> P' assignment.
+* Training: checkpoints are mesh-agnostic (full logical arrays + manifest);
+  ``reshard_plan`` produces the device_put shardings for the new mesh.
+* Stragglers: PK's contiguous ranges are provably balanced (±1 edge); PBA's
+  worst-case receive volume is bounded by pair_capacity — both are static
+  guarantees rather than runtime mitigation, which is what lets the paper's
+  "embarrassingly parallel" claim survive real clusters.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RangeAssignment:
+    """Contiguous [start, stop) global ranges per worker."""
+    starts: np.ndarray
+    stops: np.ndarray
+
+    def for_rank(self, r: int) -> tuple[int, int]:
+        return int(self.starts[r]), int(self.stops[r])
+
+
+def partition_range(total: int, workers: int) -> RangeAssignment:
+    """Balanced contiguous partition (sizes differ by at most 1)."""
+    base, rem = divmod(total, workers)
+    sizes = np.full(workers, base, np.int64)
+    sizes[:rem] += 1
+    stops = np.cumsum(sizes)
+    starts = stops - sizes
+    return RangeAssignment(starts, stops)
+
+
+def repartition(total: int, old_workers: int, new_workers: int
+                ) -> RangeAssignment:
+    """Elastic re-partition: the new assignment regenerates identical edges
+    because edge identity = global index, independent of worker count."""
+    del old_workers  # identity is index-based; the old layout is irrelevant
+    return partition_range(total, new_workers)
+
+
+def surviving_assignment(total: int, workers: int,
+                         failed: set[int]) -> RangeAssignment:
+    """Failure handling: redistribute the dead ranks' ranges round-robin to
+    survivors. Survivors keep their original range (cache-friendly) and take
+    an extra slice of the orphaned work."""
+    alive = [r for r in range(workers) if r not in failed]
+    if not alive:
+        raise RuntimeError("no survivors")
+    base = partition_range(total, workers)
+    extra_ranges = [(int(base.starts[r]), int(base.stops[r]))
+                    for r in sorted(failed)]
+    starts = list(base.starts[alive])
+    stops = list(base.stops[alive])
+    # append orphan slices as additional work items (start/stop pairs)
+    for i, (s, e) in enumerate(extra_ranges):
+        starts.append(s)
+        stops.append(e)
+    return RangeAssignment(np.asarray(starts), np.asarray(stops))
+
+
+def reshard_plan(param_specs, rules):
+    """Shardings for restoring a mesh-agnostic checkpoint onto a new mesh."""
+    return rules.param_shardings(param_specs)

@@ -1,0 +1,469 @@
+"""Post-SPMD HLO statistics: collective bytes with while-loop trip counts.
+
+``cost_analysis()`` has no collective term, so we parse the optimized HLO
+text (assignment ROOFLINE spec): for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute we count the bytes a device
+moves, multiplying instructions inside while bodies (lax.scan/while_loop) by
+the loop trip count.
+
+Byte accounting per kind (result type is what the text carries):
+  all-reduce          result bytes          (≈ ring cost is 2x(n-1)/n; the
+                                             roofline term uses 1x — noted)
+  all-gather          result bytes          (= operand x participants)
+  reduce-scatter      result bytes x participants (operand size)
+  all-to-all          result bytes
+  collective-permute  result bytes
+
+Trip counts come from the loop condition's compare-against-constant (exact
+for scan-lowered loops; ambiguity → max constant, flagged). The walk covers
+while bodies, calls, conditionals and async wrappers from the entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+_ARRAY_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLL_LINE_RE = re.compile(
+    r"=\s*(?P<type>\([^=]*?\)|[\w\[\],{}\d]+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_REF_RES = [
+    re.compile(r"body=%?([\w\.\-]+)"),
+    re.compile(r"condition=%?([\w\.\-]+)"),
+    re.compile(r"to_apply=%?([\w\.\-]+)"),
+    re.compile(r"called_computations=\{([^}]*)\}"),
+    re.compile(r"branch_computations=\{([^}]*)\}"),
+    re.compile(r"calls=%?([\w\.\-]+)"),
+]
+# while lines can carry huge tuple types with /*index=N*/ comments — detect
+# the op and pull condition/body attributes independently.
+_WHILE_DETECT_RE = re.compile(r"\bwhile\(")
+_COND_ATTR_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_BODY_ATTR_RE = re.compile(r"body=%?([\w\.\-]+)")
+
+
+def _match_while(ln: str):
+    if not _WHILE_DETECT_RE.search(ln) or "=" not in ln.split("while(")[0]:
+        return None
+    c = _COND_ATTR_RE.search(ln)
+    b = _BODY_ATTR_RE.search(ln)
+    if c and b:
+        return c.group(1), b.group(1)
+    return None
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COMP_START_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^{]*)?\{")
+
+
+def _array_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _ARRAY_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _participants(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len([x for x in m.group(1).split(",") if x.strip()]), 1)
+    return 1
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+    ambiguous_loops: int
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def _split_computations(hlo: str) -> dict[str, tuple[bool, list[str]]]:
+    """name -> (is_entry, body lines), with /*...*/ comments stripped.
+
+    A computation header is an unindented line ending in '{' that carries a
+    signature arrow ' -> ' (or starts with ENTRY). This skips the HloModule
+    header and `is_scheduled` metadata tables. Comments are stripped first:
+    `/*index=N*/` markers inside long tuple types contain '=' and would
+    otherwise break the type/op grammar.
+    """
+    comps: dict[str, tuple[bool, list[str]]] = {}
+    name, buf, depth, is_entry = None, [], 0, False
+    for ln in hlo.splitlines():
+        if "/*" in ln:
+            ln = _COMMENT_RE.sub("", ln)
+        if name is None:
+            if not ln or ln[0].isspace():
+                continue
+            s = ln.strip()
+            if not s.endswith("{"):
+                continue
+            starts_entry = s.startswith("ENTRY")
+            if " -> " not in s and not starts_entry:
+                continue
+            sig = s[len("ENTRY"):].strip() if starts_entry else s
+            m = re.match(r"%?([\w\.\-]+)", sig)
+            if not m:
+                continue
+            name = m.group(1)
+            is_entry = starts_entry
+            buf = [ln]
+            depth = ln.count("{") - ln.count("}")
+            if depth <= 0:
+                comps[name] = (is_entry, buf)
+                name = None
+            continue
+        buf.append(ln)
+        depth += ln.count("{") - ln.count("}")
+        if depth <= 0:
+            comps[name] = (is_entry, buf)
+            name = None
+    return comps
+
+
+def collect_collective_stats(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+
+    direct: dict[str, list] = {}
+    whiles: dict[str, list] = {}
+    refs: dict[str, list] = {}
+    entry = None
+    for cname, (is_entry, lines) in comps.items():
+        if is_entry:
+            entry = cname
+        insts, wls, rs = [], [], []
+        for ln in lines:
+            m = _COLL_LINE_RE.search(ln)
+            if m:
+                kind = m.group("op")
+                if m.group("suffix"):
+                    # async start: type is (operand, result) — take the max
+                    # (all-gather/reduce-scatter: that's the full buffer;
+                    # all-reduce: both equal) and skip the rs multiplier.
+                    sizes = [_array_bytes(f"{dt}[{dims}]") for dt, dims in
+                             _ARRAY_RE.findall(m.group("type"))]
+                    b = max(sizes) if sizes else 0
+                else:
+                    b = _array_bytes(m.group("type"))
+                    if kind == "reduce-scatter":
+                        b *= _participants(ln)
+                insts.append((kind, b))
+            wm = _match_while(ln)
+            if wm:
+                wls.append(wm)
+                continue  # body/condition already captured as loop refs
+            for rre in _REF_RES:
+                for g in rre.findall(ln):
+                    for nm in g.split(","):
+                        nm = nm.strip().lstrip("%")
+                        if nm and nm in comps:
+                            rs.append(nm)
+        direct[cname] = insts
+        whiles[cname] = wls
+        refs[cname] = rs
+
+    ambiguous = 0
+
+    def trip_count(cond_name: str) -> int:
+        nonlocal ambiguous
+        body = "\n".join(comps.get(cond_name, (False, []))[1])
+        consts = [int(x) for x in _CONST_RE.findall(body) if int(x) > 0]
+        if not consts:
+            return 1
+        if len(set(consts)) > 1:
+            ambiguous += 1
+        return max(consts)
+
+    memo: dict[str, dict] = {}
+
+    def bytes_of(cname: str, stack: frozenset) -> dict:
+        if cname in memo:
+            return memo[cname]
+        if cname in stack:
+            return {"bytes": {}, "count": {}}
+        acc: dict[str, float] = defaultdict(float)
+        cnt: dict[str, float] = defaultdict(float)
+        for kind, b in direct.get(cname, ()):
+            acc[kind] += b
+            cnt[kind] += 1
+        st = stack | {cname}
+        for cond, body in whiles.get(cname, ()):
+            t = trip_count(cond)
+            sub = bytes_of(body, st)
+            for kind, b in sub["bytes"].items():
+                acc[kind] += t * b
+            for kind, c in sub["count"].items():
+                cnt[kind] += t * c
+        for r in refs.get(cname, ()):
+            sub = bytes_of(r, st)
+            for kind, b in sub["bytes"].items():
+                acc[kind] += b
+            for kind, c in sub["count"].items():
+                cnt[kind] += c
+        out = {"bytes": dict(acc), "count": dict(cnt)}
+        memo[cname] = out
+        return out
+
+    if entry is None:
+        acc: dict[str, float] = defaultdict(float)
+        cnt: dict[str, float] = defaultdict(float)
+        for insts in direct.values():
+            for kind, b in insts:
+                acc[kind] += b
+                cnt[kind] += 1
+        return CollectiveStats(dict(acc), dict(cnt), -1)
+
+    top = bytes_of(entry, frozenset())
+    return CollectiveStats(top["bytes"], top["count"], ambiguous)
+
+
+# --------------------------------------------------------------------------
+# Trip-aware FLOPs and HBM-traffic estimates.
+#
+# XLA's cost_analysis() counts a while-loop body ONCE, so scanned layer
+# stacks under-report by the trip count. We re-derive both terms from the
+# HLO text with the same loop-multiplier walk as the collectives:
+#   flops: 2 * prod(result_dims) * prod(lhs contracting dims) per dot
+#          (recursing into fusion computations — dots dominate; elementwise
+#          and reduce flops are ignored, noted in EXPERIMENTS.md).
+#   bytes: per *top-level* instruction, result + operand buffer bytes
+#          (fusion-internal ops never touch HBM; parameter/gte/bitcast/tuple
+#          plumbing is skipped). This approximates HBM traffic the same way
+#          cost_analysis does, but trip-aware.
+# --------------------------------------------------------------------------
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                     r"(\([^=]*?\)|[\w\[\],{}\d]+)\s+([\w\-]+)")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_OPND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_NO_TRAFFIC = {"parameter", "get-tuple-element", "bitcast", "tuple",
+               "constant", "after-all", "partition-id", "replica-id",
+               "bitcast-convert", "iota"}
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float
+    hbm_bytes: float
+    collective: "CollectiveStats"
+
+
+def _shape_dims(type_text: str) -> list[int]:
+    m = _ARRAY_RE.search(type_text)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+def collect_hlo_costs(hlo: str) -> HloCosts:
+    comps = _split_computations(hlo)
+
+    entry = None
+    info: dict[str, dict] = {}
+    for cname, (is_entry, lines) in comps.items():
+        if is_entry:
+            entry = cname
+        shapes: dict[str, str] = {}
+        insts = []
+        wls = []
+        rs = []
+        fusion_calls: set[str] = set()
+        for ln in lines[1:]:
+            dm = _DEF_RE.match(ln)
+            if not dm:
+                continue
+            name, rtype, op = dm.group(1), dm.group(2), dm.group(3)
+            shapes[name] = rtype
+            wm = _match_while(ln)
+            if wm:
+                wls.append(wm)
+                insts.append(("while", ln, name, rtype, op))
+                continue
+            for rre in _REF_RES:
+                for g in rre.findall(ln):
+                    for nm in g.split(","):
+                        nm = nm.strip().lstrip("%")
+                        if nm and nm in comps:
+                            rs.append(nm)
+                            if "fusion(" in ln:
+                                fusion_calls.add(nm)
+            insts.append((op, ln, name, rtype, op))
+        info[cname] = dict(shapes=shapes, insts=insts, whiles=wls, refs=rs,
+                           fusions=fusion_calls)
+
+    ambiguous = 0
+
+    def trip_count(cond_name: str) -> int:
+        nonlocal ambiguous
+        body = "\n".join(comps.get(cond_name, (False, []))[1])
+        consts = [int(x) for x in _CONST_RE.findall(body) if int(x) > 0]
+        if not consts:
+            return 1
+        if len(set(consts)) > 1:
+            ambiguous += 1
+        return max(consts)
+
+    def dot_flops(ln: str, rtype: str, shapes: dict) -> float:
+        dims = _shape_dims(rtype)
+        out = 1.0
+        for d in dims:
+            out *= d
+        # contraction size from the lhs operand's shape
+        cm = _CONTRACT_RE.search(ln)
+        contract = 1.0
+        # first operand name after 'dot('
+        after = ln.split("dot(", 1)[1] if "dot(" in ln else ""
+        names = _OPND_NAME_RE.findall(after.split(")")[0])
+        if names and cm is not None:
+            lhs_type = shapes.get(names[0], "")
+            lhs_dims = _shape_dims(lhs_type)
+            for ds in cm.group(1).split(","):
+                if ds and int(ds) < len(lhs_dims):
+                    contract *= lhs_dims[int(ds)]
+        return 2.0 * out * contract
+
+    flops_memo: dict[str, float] = {}
+    bytes_memo: dict[str, float] = {}
+
+    def flops_of(cname: str, stack: frozenset) -> float:
+        if cname in flops_memo:
+            return flops_memo[cname]
+        if cname in stack:
+            return 0.0
+        ci = info.get(cname)
+        if ci is None:
+            return 0.0
+        total = 0.0
+        st = stack | {cname}
+        for op, ln, name, rtype, _ in ci["insts"]:
+            if op == "dot":
+                total += dot_flops(ln, rtype, ci["shapes"])
+        for cond, body in ci["whiles"]:
+            total += trip_count(cond) * flops_of(body, st)
+        for r in set(ci["refs"]):
+            if r not in {b for _, b in ci["whiles"]} | {
+                    c for c, _ in ci["whiles"]}:
+                total += flops_of(r, st)
+        flops_memo[cname] = total
+        return total
+
+    def _fusion_param_traffic(fused_name: str) -> dict[int, float]:
+        """Param index -> traffic bytes, for params that are only sliced
+        inside the fusion (scan bodies slice one layer from stacked
+        weights — charging the full stack per iteration would overcount
+        by the trip count)."""
+        ci = info.get(fused_name)
+        if ci is None:
+            return {}
+        out: dict[int, float] = {}
+        param_name_to_idx: dict[str, int] = {}
+        for op, ln, name, rtype, _ in ci["insts"]:
+            if op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", ln)
+                if m:
+                    param_name_to_idx[name] = int(m.group(1))
+        sliced: dict[int, float] = {}
+        used_whole: set[int] = set()
+        for op, ln, name, rtype, _ in ci["insts"]:
+            if op == "parameter":
+                continue
+            paren = ln.split("(", 1)
+            if len(paren) != 2:
+                continue
+            opnds = _OPND_NAME_RE.findall(paren[1].split(")")[0])
+            for pos, nm in enumerate(opnds):
+                if nm not in param_name_to_idx:
+                    continue
+                idx = param_name_to_idx[nm]
+                if op == "dynamic-slice" and pos == 0:
+                    sliced[idx] = sliced.get(idx, 0.0) + _array_bytes(rtype)
+                else:
+                    used_whole.add(idx)
+        for idx, b in sliced.items():
+            if idx not in used_whole:
+                out[idx] = b
+        return out
+
+    def bytes_of_comp(cname: str, stack: frozenset) -> float:
+        if cname in bytes_memo:
+            return bytes_memo[cname]
+        if cname in stack:
+            return 0.0
+        ci = info.get(cname)
+        if ci is None:
+            return 0.0
+        total = 0.0
+        st = stack | {cname}
+        shapes = ci["shapes"]
+        for op, ln, name, rtype, _ in ci["insts"]:
+            if op in _NO_TRAFFIC or op == "while":
+                continue
+            paren = ln.split("(", 1)
+            opnds = (_OPND_NAME_RE.findall(paren[1].split(")")[0])
+                     if len(paren) == 2 else [])
+            if op == "dynamic-slice":
+                # reads only the slice region + writes the result
+                total += 2.0 * _array_bytes(rtype)
+                continue
+            if op == "dynamic-update-slice":
+                # in-place: read + write the update region only
+                upd = (_array_bytes(shapes.get(opnds[1], ""))
+                       if len(opnds) > 1 else _array_bytes(rtype))
+                total += 2.0 * upd
+                continue
+            b = _array_bytes(rtype)
+            slice_traffic: dict[int, float] = {}
+            if op == "fusion":
+                called = re.search(r"calls=%?([\w\.\-]+)", ln)
+                if called:
+                    slice_traffic = _fusion_param_traffic(called.group(1))
+            for pos, nm in enumerate(opnds):
+                if pos in slice_traffic:
+                    b += slice_traffic[pos]
+                elif nm in shapes:
+                    b += _array_bytes(shapes[nm])
+            total += b
+        for cond, body in ci["whiles"]:
+            total += trip_count(cond) * bytes_of_comp(body, st)
+        non_fusion_refs = (set(ci["refs"]) - ci["fusions"]
+                           - {b for _, b in ci["whiles"]}
+                           - {c for c, _ in ci["whiles"]})
+        for r in non_fusion_refs:
+            total += bytes_of_comp(r, st)
+        bytes_memo[cname] = total
+        return total
+
+    coll = collect_collective_stats(hlo)
+    if entry is None:
+        return HloCosts(0.0, 0.0, coll)
+    return HloCosts(flops_of(entry, frozenset()),
+                    bytes_of_comp(entry, frozenset()), coll)

@@ -1,0 +1,24 @@
+"""Production mesh construction (assignment MULTI-POD DRY-RUN spec).
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state. The dry-run forces 512 host devices via XLA_FLAGS before any
+jax import; smoke tests and benches see the real single device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_proc_mesh(num_procs: int = 0, axis_name: str = "proc"):
+    """1-D mesh over all (or the first N) devices for the graph generators."""
+    import numpy as np
+    devs = jax.devices() if not num_procs else jax.devices()[:num_procs]
+    return jax.sharding.Mesh(np.array(devs), (axis_name,))

@@ -1,0 +1,52 @@
+"""Post-pass: recompute trip-aware HLO stats for existing dry-run records
+from the persisted gzipped HLO (no recompilation needed).
+
+    PYTHONPATH=src python -m repro.launch.restat [--dryrun results/dryrun]
+        [--hlo results/hlo]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.launch.hlo_stats import collect_hlo_costs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun", default="results/dryrun")
+    ap.add_argument("--hlo", default="results/hlo")
+    args = ap.parse_args()
+    for jpath in sorted(glob.glob(os.path.join(args.dryrun, "*.json"))):
+        tag = os.path.basename(jpath)[:-5]
+        hpath = os.path.join(args.hlo, tag + ".hlo.gz")
+        if not os.path.exists(hpath):
+            print(f"[skip] {tag}: no hlo")
+            continue
+        with gzip.open(hpath, "rt") as f:
+            hlo = f.read()
+        costs = collect_hlo_costs(hlo)
+        with open(jpath) as f:
+            rec = json.load(f)
+        pd = rec["per_device"]
+        if "flops_xla_1trip" not in pd:
+            pd["flops_xla_1trip"] = pd.get("flops", 0.0)
+            pd["bytes_xla_1trip"] = pd.get("bytes_accessed", 0.0)
+        pd["flops"] = costs.flops
+        pd["bytes_accessed"] = costs.hbm_bytes
+        pd["collective_bytes"] = costs.collective.total_bytes
+        pd["collective_bytes_by_kind"] = costs.collective.bytes_by_kind
+        pd["collective_count_by_kind"] = costs.collective.count_by_kind
+        pd["ambiguous_loops"] = costs.collective.ambiguous_loops
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=2)
+        print(f"[restat] {tag}: flops={costs.flops:.3e} "
+              f"bytes={costs.hbm_bytes:.3e} "
+              f"coll={costs.collective.total_bytes/2**30:.3f}GiB")
+
+
+if __name__ == "__main__":
+    main()

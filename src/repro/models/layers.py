@@ -1,0 +1,161 @@
+"""Shared model building blocks: param specs, norms, RoPE, MLPs, embeddings.
+
+Parameters are plain nested dicts of arrays; each model provides a parallel
+tree of ``ParamSpec`` (shape + logical axis names). ``sharding/rules.py``
+turns logical axes into mesh PartitionSpecs — the same spec tree drives init,
+checkpointing and the dry-run ShapeDtypeStructs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    init: str = "fan_in"             # fan_in | zeros | ones | normal | small
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_param(key, spec: ParamSpec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "small":
+        return 0.01 * jax.random.normal(key, spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return jax.random.normal(key, spec.shape, spec.dtype)
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[0], 1)
+    scale = 1.0 / math.sqrt(fan_in)
+    return scale * jax.random.normal(key, spec.shape, spec.dtype)
+
+
+def init_tree(key, specs) -> Any:
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree_util.tree_unflatten(
+        treedef, [init_param(k, s) for k, s in zip(keys, leaves)])
+
+
+def spec_struct(specs) -> Any:
+    """ShapeDtypeStruct tree for eval_shape / dry-run."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------- norms
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def norm_specs(cfg) -> dict:
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((cfg.d_model,), ("embed",), "ones"),
+                "bias": ParamSpec((cfg.d_model,), ("embed",), "zeros")}
+    return {"scale": ParamSpec((cfg.d_model,), ("embed",), "zeros")}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# ---------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float, positions) -> tuple[jax.Array, jax.Array]:
+    """cos/sin tables for ``positions`` (any shape) -> (*pos, head_dim//2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                           / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., seq, heads, head_dim); cos/sin: (seq, head_dim//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., :, None, :]
+    s = sin[..., :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+
+def mlp_specs(cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp == "swiglu":
+        return {"wi": ParamSpec((d, f), ("embed", "mlp")),
+                "wg": ParamSpec((d, f), ("embed", "mlp")),
+                "wo": ParamSpec((f, d), ("mlp", "embed"))}
+    return {"wi": ParamSpec((d, f), ("embed", "mlp")),
+            "wo": ParamSpec((f, d), ("mlp", "embed"))}
+
+
+def apply_mlp(cfg, p, x):
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["wi"].astype(x.dtype)) * (x @ p["wg"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(x @ p["wi"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------- embeddings
+
+def embed_specs(cfg) -> dict:
+    specs = {"tok": ParamSpec((cfg.vocab_size, cfg.d_model),
+                              ("vocab", "embed"), "small")}
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((cfg.vocab_size, cfg.d_model),
+                                  ("vocab", "embed"), "small")
+    return specs
+
+
+def embed_tokens(p, tokens, dtype):
+    return p["tok"].astype(dtype)[tokens]
+
+
+def logits_out(cfg, p, x):
+    w = p.get("head", p["tok"])
+    return x @ w.astype(x.dtype).T
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv. x: (B, S, C), w: (K, C).
+
+    state: (B, K-1, C) trailing context from the previous segment (decode).
+    Returns (y, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (k - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (B, S+K-1, C)
+    y = sum(xp[:, i: i + x.shape[1]] * w[i].astype(x.dtype)
+            for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(pad)
+    return y, new_state

@@ -1,0 +1,197 @@
+"""Top-level model API: build → init/specs → loss / prefill / decode_step.
+
+``build_model(cfg, tp)`` resolves TP-divisibility padding (DESIGN.md §8):
+query heads pad up to a multiple of the model-axis size; KV heads smaller
+than the axis stay unsharded (replicated — standard MQA/GQA TP behavior);
+Mamba-2's inner dim pads so SSD heads split evenly. True (unpadded) parameter
+counts drive MODEL_FLOPS; the padding waste is visible in the
+MODEL_FLOPS / HLO_FLOPs roofline ratio by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tf
+from repro.models.layers import (ParamSpec, apply_norm, embed_specs,
+                                 embed_tokens, init_tree, logits_out,
+                                 norm_specs, spec_struct)
+from repro.sharding.ctx import constrain
+
+
+def _pad_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig            # possibly padded for TP (see build_model)
+    raw_cfg: ArchConfig        # the assigned config (true param counts)
+    heads: int
+    kv_heads: int
+    kv_sharded: bool
+    compute_dtype: Any = jnp.bfloat16
+
+    # ---------------------------------------------------------- specs/init
+
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        specs: dict[str, Any] = {"embed": embed_specs(cfg)}
+        if cfg.family == "audio":
+            specs["encdec"] = encdec_lib.encdec_specs(cfg, self.heads,
+                                                      self.kv_heads)
+        else:
+            specs["stack"] = tf.stack_specs(cfg, self.heads, self.kv_heads)
+        specs["final_norm"] = norm_specs(cfg)
+        return specs
+
+    def init(self, key) -> dict:
+        return init_tree(key, self.param_specs())
+
+    def param_struct(self) -> dict:
+        return spec_struct(self.param_specs())
+
+    def count_params(self, params=None) -> int:
+        import math
+        tree = params if params is not None else self.param_struct()
+        return sum(math.prod(x.shape)
+                   for x in jax.tree_util.tree_leaves(tree))
+
+    # ---------------------------------------------------------- forward
+
+    def _embed(self, params, batch):
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], batch["tokens"], self.compute_dtype)
+        if cfg.num_patches and "image_embeds" in batch:
+            img = batch["image_embeds"].astype(self.compute_dtype)
+            npatch = img.shape[1]
+            x = jnp.concatenate([img, x[:, npatch:]], axis=1)
+        return constrain(x, "act_btd")
+
+    def loss(self, params, batch) -> jax.Array:
+        """Next-token cross entropy (+ MoE aux). batch: tokens, labels[, ...]."""
+        cfg = self.cfg
+        x = self._embed(params, batch)
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        if cfg.family == "audio":
+            enc = encdec_lib.run_encoder(
+                cfg, params["encdec"], batch["frames"].astype(x.dtype),
+                self.heads, self.kv_heads)
+            cross_kv = encdec_lib.project_cross_kv(
+                cfg, params["encdec"], enc, self.heads, self.kv_heads)
+            x, _ = encdec_lib.run_decoder(
+                cfg, params["encdec"], x, positions, None, cross_kv,
+                self.heads, self.kv_heads, train=True)
+            aux = jnp.float32(0.0)
+        else:
+            x, _, aux = tf.apply_stack(cfg, params["stack"], x, positions,
+                                       None, self.heads, self.kv_heads,
+                                       train=True)
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = logits_out(cfg, params["embed"], x)
+        logits = constrain(logits, "logits_btv")
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        tgt = jnp.take_along_axis(
+            logits.astype(jnp.float32), batch["labels"][..., None],
+            axis=-1)[..., 0]
+        ce = (lse - tgt).mean()
+        return ce + 0.01 * aux
+
+    # ---------------------------------------------------------- serving
+
+    def cache_structs(self, batch: int, max_len: int) -> dict:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            return encdec_lib.encdec_cache_structs(cfg, batch, max_len,
+                                                   self.compute_dtype,
+                                                   self.kv_heads)
+        return tf.cache_structs(cfg, batch, max_len, self.compute_dtype,
+                                self.kv_heads)
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            self.cache_structs(batch, max_len))
+
+    def prefill(self, params, batch, max_len: int = 0):
+        """Process the prompt; returns (last-position logits, filled caches)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        max_len = max_len or s
+        x = self._embed(params, batch)
+        positions = jnp.arange(s, dtype=jnp.int32)
+        caches = self.init_cache(b, max_len)
+        if cfg.family == "audio":
+            enc = encdec_lib.run_encoder(
+                cfg, params["encdec"], batch["frames"].astype(x.dtype),
+                self.heads, self.kv_heads)
+            cross_kv = encdec_lib.project_cross_kv(
+                cfg, params["encdec"], enc, self.heads, self.kv_heads)
+            x, self_caches = encdec_lib.run_decoder(
+                cfg, params["encdec"], x, positions, caches["self"],
+                cross_kv, self.heads, self.kv_heads, train=False)
+            new_caches = {"self": self_caches, "cross": cross_kv}
+        else:
+            x, new_caches, _ = tf.apply_stack(cfg, params["stack"], x,
+                                              positions, caches, self.heads,
+                                              self.kv_heads, train=False)
+        x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+        logits = logits_out(cfg, params["embed"], x)
+        return constrain(logits, "logits_btv"), new_caches
+
+    def decode_step(self, params, tokens, caches, pos):
+        """One token step. tokens: (B, 1); pos: scalar int32 current length."""
+        cfg = self.cfg
+        x = embed_tokens(params["embed"], tokens, self.compute_dtype)
+        positions = jnp.full((1,), pos, jnp.int32)
+        if cfg.family == "audio":
+            x, self_caches = encdec_lib.run_decoder(
+                cfg, params["encdec"], x, positions, caches["self"],
+                caches["cross"], self.heads, self.kv_heads, train=False)
+            new_caches = {"self": self_caches, "cross": caches["cross"]}
+        else:
+            x, new_caches, _ = tf.apply_stack(cfg, params["stack"], x,
+                                              positions, caches, self.heads,
+                                              self.kv_heads, train=False)
+        x = apply_norm(cfg, params["final_norm"], x)
+        logits = logits_out(cfg, params["embed"], x)
+        return constrain(logits, "logits_btv"), new_caches
+
+
+def build_model(cfg: ArchConfig, tp: int = 1,
+                compute_dtype=jnp.bfloat16) -> Model:
+    raw = cfg
+    heads = cfg.num_heads
+    kv = cfg.num_kv_heads
+    changes: dict[str, Any] = {}
+    if heads and heads % tp:
+        heads = _pad_up(heads, tp)
+        changes["num_heads"] = heads
+    if kv > tp and kv % tp:
+        kv = _pad_up(kv, tp)
+    if kv and heads % kv:
+        # padded Q heads must stay an integer multiple of KV heads: pad kv
+        # up to the nearest divisor of the padded head count.
+        kv = next(k for k in range(kv, heads + 1) if heads % k == 0)
+    if kv != cfg.num_kv_heads:
+        changes["num_kv_heads"] = kv
+    kv_sharded = kv > 0 and kv % tp == 0
+    if cfg.ssm_state:
+        di = cfg.ssm_d_inner or cfg.ssm_expand * cfg.d_model
+        nh = di // cfg.ssm_headdim
+        if nh % tp:
+            di = _pad_up(nh, tp) * cfg.ssm_headdim
+            changes["ssm_d_inner"] = di
+    if cfg.vocab_size % tp:
+        changes["vocab_size"] = _pad_up(cfg.vocab_size, tp)
+    if changes:
+        cfg = dataclasses.replace(cfg, **changes)
+    return Model(cfg=cfg, raw_cfg=raw, heads=heads, kv_heads=max(kv, 1),
+                 kv_sharded=kv_sharded, compute_dtype=compute_dtype)

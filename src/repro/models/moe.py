@@ -1,0 +1,260 @@
+"""Mixture-of-Experts layer: top-k routing, capacity-bounded dispatch, EP.
+
+Dispatch is sort-free scatter-by-capacity (GShard semantics, Megatron-style
+buffers): each token's top-k choices get a position-in-expert from an
+occurrence rank; tokens beyond an expert's capacity are dropped (weighted 0),
+standard for capacity-based MoE. The (E, C, D) buffers carry logical axes
+("experts" -> model mesh axis) so SPMD inserts the token all_to_all.
+
+An auxiliary load-balancing loss (Switch-style) is returned to the caller.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec
+from repro.sharding.ctx import constrain
+
+
+def moe_specs(cfg) -> dict:
+    d = cfg.d_model
+    e = cfg.num_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    specs = {
+        "router": ParamSpec((d, e), ("embed", None), "small"),
+        "wi": ParamSpec((e, d, f), ("experts", "embed", "moe_mlp")),
+        "wg": ParamSpec((e, d, f), ("experts", "embed", "moe_mlp")),
+        "wo": ParamSpec((e, f, d), ("experts", "moe_mlp", "embed")),
+    }
+    if cfg.shared_expert_d_ff:
+        fs = cfg.shared_expert_d_ff
+        specs.update({
+            "shared_wi": ParamSpec((d, fs), ("embed", "mlp")),
+            "shared_wg": ParamSpec((d, fs), ("embed", "mlp")),
+            "shared_wo": ParamSpec((fs, d), ("mlp", "embed")),
+        })
+    return specs
+
+
+def _position_in_expert(expert_ids: jax.Array, num_experts: int) -> jax.Array:
+    """occurrence rank of each assignment within its expert (flat order)."""
+    n = expert_ids.shape[0]
+    idx = jnp.argsort(expert_ids, stable=True)
+    se = expert_ids[idx]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    is_start = jnp.concatenate([jnp.ones((1,), bool), se[1:] != se[:-1]])
+    start = jax.lax.cummax(jnp.where(is_start, pos, 0))
+    return jnp.zeros((n,), jnp.int32).at[idx].set(pos - start)
+
+
+def _grouped_auto(cfg, p, x, gate_vals, ids_r, pos_r, keep, cap):
+    """Grouped dispatch in pure auto-SPMD (smoke tests / tp=1)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    pos_safe = jnp.where(keep, pos_r, 0)
+    src = jnp.repeat(x, k, axis=1)                       # (B, S*k, D)
+    src = jnp.where(keep[..., None], src, 0)
+
+    def row_scatter(ids, pos, vals):
+        return jnp.zeros((e, cap, d), x.dtype).at[ids, pos].add(vals)
+
+    buf = jax.vmap(row_scatter)(ids_r, pos_safe, src)    # (B, E, C, D)
+    buf = constrain(buf, "moe_becd")
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"].astype(x.dtype))
+    if "wg" in p:
+        h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", buf,
+                                        p["wg"].astype(x.dtype))
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "moe_becf")
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"].astype(x.dtype))
+    out_buf = constrain(out_buf, "moe_becd")
+
+    def row_gather(bufr, ids, pos):
+        return bufr[ids, pos]
+
+    gathered = jax.vmap(row_gather)(out_buf, ids_r, pos_safe)
+    # Constrain the per-assignment gather output to shard s·k over 'model':
+    # each model shard then gathers its own sequence slice from an
+    # all-gathered out_buf (bf16) instead of SPMD's per-assignment masked
+    # f32 all-reduce — §Perf M4.
+    gathered = constrain(gathered, "moe_btkd")
+    gathered = jnp.where(keep[..., None], gathered,
+                         jnp.zeros((), x.dtype))
+    weighted = gathered * gate_vals.reshape(b, s * k, 1).astype(x.dtype)
+    return weighted.reshape(b, s, k, d).sum(axis=2)
+
+
+def _grouped_manual(cfg, p, x, gate_vals, ids_r, pos_r, keep, cap, mesh):
+    """Manual shard_map region over the 'model' axis only (EP).
+
+    Every model shard owns e/tp experts. Routing data is replicated across
+    model, so dispatch is a *local* scatter of the shard's own tokens; the
+    gate-weighted sum over k happens *before* the single bf16 psum — this is
+    the §Perf M3 iteration: auto-SPMD realized the combine as a per-
+    assignment f32 all-reduce of (B, S·k, D), 8x larger and in the wrong
+    dtype. Data/pod axes stay auto (FSDP weight gathers unchanged).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    tp = int(mesh.shape["model"])
+    e_loc = e // tp
+    from jax.sharding import PartitionSpec as P
+
+    compute_dtype = x.dtype
+    gates = gate_vals.astype(jnp.float32)                # (B, S, k)
+    x32 = x.astype(jnp.float32)  # all reducing collectives f32 (CPU backend)
+
+    def region(xb, ids, pos, kp, g, wi, wg, wo):
+        # xb enters SEQ-SHARDED over 'model' (matches the sequence-parallel
+        # residual): its backward is a reduce-scatter, not a psum — which
+        # sidesteps XLA:CPU's bf16 AllReducePromotion crash for the big
+        # tensor. gates stay f32 (their boundary psum is tiny).
+        xb = jax.lax.all_gather(xb, "model", axis=1, tiled=True)
+        xb = xb.astype(compute_dtype)
+        g = g.astype(compute_dtype)
+        shard = jax.lax.axis_index("model")
+        local = (ids // e_loc) == shard
+        ok = kp & local
+        ids_l = jnp.where(ok, ids - shard * e_loc, 0)
+        pos_l = jnp.where(ok, pos, cap)                  # cap = trash column
+        src = jnp.repeat(xb, k, axis=1)
+        src = jnp.where(ok[..., None], src, 0)
+
+        def row_scatter(i, q, v):
+            return jnp.zeros((e_loc, cap + 1, d), xb.dtype).at[i, q].add(v)
+
+        buf = jax.vmap(row_scatter)(ids_l, pos_l, src)[:, :, :cap]
+        h = jnp.einsum("becd,edf->becf", buf, wi.astype(xb.dtype))
+        if wg is not None:
+            h = jax.nn.silu(h) * jnp.einsum("becd,edf->becf", buf,
+                                            wg.astype(xb.dtype))
+        else:
+            h = jax.nn.gelu(h)
+        out_buf = jnp.einsum("becf,efd->becd", h, wo.astype(xb.dtype))
+
+        def row_gather(bufr, i, q):
+            return bufr[i, jnp.minimum(q, cap - 1)]
+
+        gathered = jax.vmap(row_gather)(out_buf, ids_l, pos_l)
+        gathered = jnp.where(ok[..., None], gathered,
+                             jnp.zeros((), xb.dtype))
+        weighted = gathered * g.reshape(b, s * k, 1)
+        y_part = weighted.reshape(b, s, k, d).sum(axis=2)
+        # reduce-scatter over the sequence dim instead of a full psum: the
+        # result lands directly in the sequence-parallel residual layout
+        # (act_btd shards seq on 'model'), moving 1/tp of the psum volume.
+        # (f32 accumulation: XLA:CPU's AllReducePromotion crashes on bf16
+        # collective reducers; TPU would keep bf16.)
+        y_shard = jax.lax.psum_scatter(y_part.astype(jnp.float32), "model",
+                                       scatter_dimension=1, tiled=True)
+        return y_shard.astype(xb.dtype)
+
+    wg = p.get("wg")
+    args = (x32, ids_r, pos_r, keep, gates, p["wi"], wg, p["wo"])
+    rep = P(None, "model", None)       # x: seq-sharded in
+    out_spec = P(None, "model", None)  # y: seq-sharded out (SP residual)
+    in_specs = (rep, P(None, None), P(None, None), P(None, None),
+                P(None, None, None), P("model", None, None),
+                None if wg is None else P("model", None, None),
+                P("model", None, None))
+    if wg is None:
+        args = (x32, ids_r, pos_r, keep, gates, p["wi"], p["wo"])
+        in_specs = in_specs[:6] + (in_specs[7],)
+
+        def region2(xb, ids, pos, kp, g, wi, wo):
+            return region(xb, ids, pos, kp, g, wi, None, wo)
+
+        fn = region2
+    else:
+        fn = region
+    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_spec, axis_names={"model"},
+                         check_vma=False)(*args)
+
+
+def apply_moe(cfg, p, x):
+    """x: (B, S, D) -> (out (B, S, D), aux_loss scalar).
+
+    Grouped dispatch (GShard groups == batch rows, which are data-sharded):
+    routing, capacity and scatter are local to each row, the buffer is
+    (B -> data, E -> model, C, D), and the expert einsums are fully local —
+    the only collective SPMD must insert is the token all-to-all between the
+    (b-sharded) dispatch and the (e-sharded) expert compute. Found via the
+    roofline dry-run: a flat (E, C, D) buffer forces a replicated scatter +
+    multi-TB all-reduce per layer (EXPERIMENTS.md §Perf, MoE iteration 1-2).
+    Decode (s == 1) keeps the flat-token path: per-row capacity would blow
+    the buffer up E× for a single token.
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    f = cfg.moe_d_ff or cfg.d_ff
+
+    logits = (x @ p["router"].astype(jnp.float32)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (B, S, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (B, S, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    if s > 1:
+        cap = max(int(cfg.capacity_factor * s * k / e), 1)
+        cap = -(-cap // 8) * 8
+        ids_r = expert_ids.reshape(b, s * k)                 # per-row ids
+        pos_r = jax.vmap(lambda ids: _position_in_expert(ids, e))(ids_r)
+        keep = pos_r < cap
+
+        import os
+        from repro.sharding.ctx import current_mesh
+        mesh = current_mesh()
+        tp_sz = int(mesh.shape["model"]) if (
+            mesh is not None and "model" in mesh.axis_names) else 0
+        manual_ok = (tp_sz > 0 and e % tp_sz == 0 and s % tp_sz == 0
+                     and os.environ.get("REPRO_MOE_MANUAL") == "1")
+        if manual_ok:
+            # §Perf M3: refuted on XLA:CPU (bf16-AR promotion bug forces an
+            # f32 boundary that costs more than the combine win); kept
+            # behind REPRO_MOE_MANUAL=1 with analysis in EXPERIMENTS.md.
+            y = _grouped_manual(cfg, p, x, gate_vals, ids_r, pos_r, keep,
+                                cap, mesh)
+        else:
+            y = _grouped_auto(cfg, p, x, gate_vals, ids_r, pos_r, keep, cap)
+        flat_ids = ids_r.reshape(-1)
+        t = b * s
+    else:
+        t = b * s
+        cap = max(int(cfg.capacity_factor * t * k / e), 1)
+        cap = -(-cap // 8) * 8
+        xt = x.reshape(t, d)
+        flat_ids = expert_ids.reshape(-1)                    # (T*k,)
+        pos_in_e = _position_in_expert(flat_ids, e)
+        keep = pos_in_e < cap
+        src = jnp.repeat(xt, k, axis=0)
+        pos_safe = jnp.where(keep, pos_in_e, 0)
+        buf = jnp.zeros((e, cap, d), x.dtype).at[flat_ids, pos_safe].add(
+            jnp.where(keep[:, None], src, 0))
+        buf = constrain(buf, "moe_ecd")
+        h = jnp.einsum("ecd,edf->ecf", buf, p["wi"].astype(x.dtype))
+        if "wg" in p:
+            h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf,
+                                            p["wg"].astype(x.dtype))
+        else:
+            h = jax.nn.gelu(h)
+        h = constrain(h, "moe_ecf")
+        out_buf = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(x.dtype))
+        out_buf = constrain(out_buf, "moe_ecd")
+        gathered = jnp.where(keep[:, None], out_buf[flat_ids, pos_safe], 0.0)
+        weighted = gathered * gate_vals.reshape(-1, 1).astype(x.dtype)
+        y = weighted.reshape(t, k, d).sum(axis=1)
+    y = y.reshape(b, s, d)
+
+    if cfg.shared_expert_d_ff:
+        hs = jax.nn.silu(x @ p["shared_wi"].astype(x.dtype)) * (
+            x @ p["shared_wg"].astype(x.dtype))
+        y = y + hs @ p["shared_wo"].astype(x.dtype)
+
+    # Switch-style load-balancing aux loss.
+    me = probs.reshape(t, e).mean(axis=0)                    # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_ids].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+    return y, aux

@@ -1,0 +1,89 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin "Hawk" block).
+
+    r_t = σ(W_a x_t + b_a)            recurrence gate
+    i_t = σ(W_x x_t + b_x)            input gate
+    a_t = exp(c·softplus(Λ)·(-r_t))   per-channel decay in (0,1), c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Train/prefill evaluates the linear recurrence with an associative scan
+(log-depth); decode is the O(1) recurrence. The block wraps the LRU with the
+Griffin structure: in-proj → causal conv → RG-LRU, gated by a GeLU branch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, causal_conv1d
+from repro.sharding.ctx import constrain
+
+C_FACTOR = 8.0
+
+
+def rglru_specs(cfg) -> dict:
+    d, w = cfg.d_model, cfg.rglru_width
+    return {
+        "in_x": ParamSpec((d, w), ("embed", "inner")),
+        "in_gate": ParamSpec((d, w), ("embed", "inner")),
+        "conv_w": ParamSpec((cfg.rglru_conv, w), (None, "inner")),
+        "conv_b": ParamSpec((w,), ("inner",), "zeros"),
+        "wa": ParamSpec((w, w), ("inner", None)),
+        "ba": ParamSpec((w,), (None,), "zeros"),
+        "wx": ParamSpec((w, w), ("inner", None)),
+        "bx": ParamSpec((w,), (None,), "zeros"),
+        "lam": ParamSpec((w,), (None,), "normal"),
+        "out": ParamSpec((w, d), ("inner", "embed")),
+    }
+
+
+def _lru_gates(p, x):
+    """x: (B, S, W) -> (a, b) with h_t = a_t h_{t-1} + b_t."""
+    r = jax.nn.sigmoid(x @ p["wa"].astype(x.dtype) + p["ba"].astype(x.dtype))
+    i = jax.nn.sigmoid(x @ p["wx"].astype(x.dtype) + p["bx"].astype(x.dtype))
+    log_a = (-C_FACTOR * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = mult.astype(x.dtype) * (i * x)
+    return a.astype(jnp.float32), b
+
+
+def apply_rglru(cfg, p, x, cache=None):
+    """x: (B, S, D); cache: None | dict(conv, h). Returns (y, new_cache)."""
+    bsz, s, _ = x.shape
+    gate = jax.nn.gelu(x @ p["in_gate"].astype(x.dtype))
+    xs = x @ p["in_x"].astype(x.dtype)
+    conv_state = cache["conv"] if cache is not None else None
+    xs, new_conv = causal_conv1d(xs, p["conv_w"], conv_state)
+    xs = xs + p["conv_b"].astype(x.dtype)
+
+    a, b = _lru_gates(p, xs)
+    h0 = cache["h"] if cache is not None else None
+    if cache is not None and s == 1:
+        h_new = (a[:, 0] * (h0.astype(jnp.float32))
+                 + b[:, 0].astype(jnp.float32))
+        h = h_new[:, None]
+        h_last = h_new
+    else:
+        af, bf = a, b.astype(jnp.float32)
+        if h0 is not None:
+            bf = bf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+        # associative linear recurrence: (a1,b1)∘(a2,b2) = (a1a2, a2 b1 + b2)
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        _, h = jax.lax.associative_scan(combine, (af, bf), axis=1)
+        h_last = h[:, -1]
+    y = (h.astype(x.dtype) * gate) @ p["out"].astype(x.dtype)
+    new_cache = (dict(conv=new_conv, h=h_last.astype(x.dtype))
+                 if cache is not None else None)
+    return y, new_cache
+
+
+def rglru_cache_struct(cfg, batch: int, dtype):
+    w = cfg.rglru_width
+    return dict(
+        conv=jax.ShapeDtypeStruct((batch, cfg.rglru_conv - 1, w), dtype),
+        h=jax.ShapeDtypeStruct((batch, w), dtype))

@@ -1,0 +1,171 @@
+"""Mamba-2 SSD (state-space duality) mixer block.
+
+Train/prefill uses the chunked SSD algorithm: quadratic attention-like math
+*within* chunks plus a linear recurrence *across* chunk states — O(S·Q)
+compute, O(S) memory. Decode is the pure recurrence with O(1) state:
+    h_t = exp(A·dt_t)·h_{t-1} + dt_t·B_t ⊗ x_t,   y_t = C_t·h_t + D·x_t
+Cache = (conv tail, recurrent state) — this is why the 500k-token decode cell
+runs for this family.
+
+Projections are split per component (z / x / B / C / dt) so tensor-parallel
+sharding of the inner dim never crosses component boundaries. Single B/C
+group (G=1), gated RMSNorm before out-proj, per the Mamba-2 reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamSpec, causal_conv1d, rmsnorm
+from repro.sharding.ctx import constrain
+
+
+def ssm_dims(cfg):
+    """(d_inner, num_heads) — d_inner may be padded for TP divisibility."""
+    d_inner = cfg.ssm_d_inner or cfg.ssm_expand * cfg.d_model
+    heads = d_inner // cfg.ssm_headdim
+    return d_inner, heads
+
+
+def ssm_specs(cfg) -> dict:
+    d = cfg.d_model
+    di, nh = ssm_dims(cfg)
+    n = cfg.ssm_state
+    k = cfg.ssm_conv
+    return {
+        "wz": ParamSpec((d, di), ("embed", "inner")),
+        "wx": ParamSpec((d, di), ("embed", "inner")),
+        "wb": ParamSpec((d, n), ("embed", None)),
+        "wc": ParamSpec((d, n), ("embed", None)),
+        "wdt": ParamSpec((d, nh), ("embed", "heads")),
+        "conv_x": ParamSpec((k, di), (None, "inner")),
+        "conv_xb": ParamSpec((di,), ("inner",), "zeros"),
+        "conv_b": ParamSpec((k, n), (None, None)),
+        "conv_bb": ParamSpec((n,), (None,), "zeros"),
+        "conv_c": ParamSpec((k, n), (None, None)),
+        "conv_cb": ParamSpec((n,), (None,), "zeros"),
+        "a_log": ParamSpec((nh,), ("heads",), "zeros"),
+        "dt_bias": ParamSpec((nh,), ("heads",), "zeros"),
+        "d_skip": ParamSpec((nh,), ("heads",), "ones"),
+        "norm": ParamSpec((di,), ("inner",), "zeros"),
+        "out_proj": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def _ssd_chunked(x, dt, a, b_in, c_in, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); a: (H,) negative decay rates;
+    b_in/c_in: (B, S, N). Returns (y (B,S,H,P), h_final (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_in.reshape(bsz, nc, chunk, n)
+    cc = c_in.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]          # (B, nc, Q, H), negative
+    cum = jnp.cumsum(da, axis=2)               # within-chunk cumulative decay
+    total = cum[:, :, -1]                      # (B, nc, H)
+
+    # intra-chunk (causal, attention-like)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,T,H)
+    qi = jnp.arange(chunk)
+    mask = (qi[:, None] >= qi[None, :])[None, None, :, :, None]
+    # mask BEFORE exp: the upper triangle of li is positive and would
+    # overflow exp, poisoning gradients through where().
+    decay = jnp.exp(jnp.where(mask, li, -1e9))
+    sc = jnp.einsum("bcqn,bctn->bcqt", cc, bc)
+    y_diag = jnp.einsum("bcqt,bcqth,bcth,bcthp->bcqhp", sc, decay, dtc, xc)
+
+    # chunk states: S_c = sum_t exp(total - cum_t) * dt_t * B_t x_t^T
+    state_decay = jnp.exp(total[:, :, None, :] - cum)     # (B,nc,Q,H)
+    states = jnp.einsum("bcth,bcth,bctn,bcthp->bchpn",
+                        state_decay, dtc, bc, xc)
+
+    # inter-chunk recurrence over chunk states
+    def step(h_prev, inp):
+        st, tot = inp                                     # (B,H,P,N), (B,H)
+        h_new = h_prev * jnp.exp(tot)[:, :, None, None] + st
+        return h_new, h_prev
+
+    h_init = (jnp.zeros((bsz, h, p, n), x.dtype) if h0 is None
+              else h0.astype(x.dtype))
+    h_last, h_prevs = jax.lax.scan(
+        step, h_init, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(total, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                 # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y += C_q exp(cum_q) h_prev
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc, jnp.exp(cum), h_prevs)
+    y = (y_diag + y_off).reshape(bsz, nc * chunk, h, p)
+    return y[:, :s], h_last
+
+
+def apply_ssm(cfg, p, x, cache=None):
+    """x: (B, S, D). cache: None | dict(conv_x, conv_b, conv_c, h).
+
+    Returns (y (B, S, D), new_cache).
+    """
+    bsz, s, d = x.shape
+    di, nh = ssm_dims(cfg)
+    n = cfg.ssm_state
+    hp = cfg.ssm_headdim
+
+    z = x @ p["wz"].astype(x.dtype)
+    xs = x @ p["wx"].astype(x.dtype)
+    b_in = x @ p["wb"].astype(x.dtype)
+    c_in = x @ p["wc"].astype(x.dtype)
+    dt_raw = x @ p["wdt"].astype(x.dtype)
+    xs = constrain(xs, "act_bti")
+
+    cs = cache or {}
+    xs, ncx = causal_conv1d(xs, p["conv_x"], cs.get("conv_x"))
+    xs = jax.nn.silu(xs + p["conv_xb"].astype(x.dtype))
+    b_in, ncb = causal_conv1d(b_in, p["conv_b"], cs.get("conv_b"))
+    b_in = jax.nn.silu(b_in + p["conv_bb"].astype(x.dtype))
+    c_in, ncc = causal_conv1d(c_in, p["conv_c"], cs.get("conv_c"))
+    c_in = jax.nn.silu(c_in + p["conv_cb"].astype(x.dtype))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))              # (H,) negative
+
+    xh = xs.reshape(bsz, s, nh, hp)
+    h0 = cache["h"] if cache is not None else None
+    if cache is not None and s == 1:
+        da = jnp.exp(dt[:, 0] * a[None])                      # (B,H)
+        dbx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0].astype(x.dtype),
+                         b_in[:, 0], xh[:, 0])
+        h_new = (h0 * da[:, :, None, None].astype(x.dtype) + dbx)
+        y = jnp.einsum("bn,bhpn->bhp", c_in[:, 0], h_new)[:, None]
+        h_last = h_new
+    else:
+        y, h_last = _ssd_chunked(xh, dt.astype(x.dtype), a.astype(x.dtype),
+                                 b_in, c_in, cfg.ssm_chunk, h0)
+    y = y + xh * p["d_skip"].astype(x.dtype)[None, None, :, None]
+    y = y.reshape(bsz, s, di)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm"])
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_cache = (dict(conv_x=ncx, conv_b=ncb, conv_c=ncc, h=h_last)
+                 if cache is not None else None)
+    return out, new_cache
+
+
+def ssm_cache_struct(cfg, batch: int, dtype):
+    di, nh = ssm_dims(cfg)
+    n = cfg.ssm_state
+    k1 = cfg.ssm_conv - 1
+    return dict(
+        conv_x=jax.ShapeDtypeStruct((batch, k1, di), dtype),
+        conv_b=jax.ShapeDtypeStruct((batch, k1, n), dtype),
+        conv_c=jax.ShapeDtypeStruct((batch, k1, n), dtype),
+        h=jax.ShapeDtypeStruct((batch, nh, cfg.ssm_headdim, cfg.ssm_state),
+                               dtype))

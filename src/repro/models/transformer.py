@@ -1,0 +1,205 @@
+"""Decoder stack assembly: layer pattern → scanned parameter stacks.
+
+Layers are grouped by the arch's ``layer_pattern`` period: ``L // p`` full
+periods run under ``lax.scan`` over stacked params (one compile of the period
+body regardless of depth — essential for the 94-layer configs), the ``L % p``
+remainder runs unrolled. Caches ride through the scan as xs/ys.
+
+Every layer = pre-norm mixer (attention / RG-LRU / SSD) + pre-norm MLP (dense
+or MoE), residual around each.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (ParamSpec, apply_mlp, apply_norm, mlp_specs,
+                                 norm_specs)
+from repro.sharding.ctx import constrain
+
+ATTN_KINDS = ("global", "local", "chunked", "bidir")
+
+
+def mixer_specs(cfg, kind: str, heads: int, kv_heads: int) -> dict:
+    if kind in ATTN_KINDS:
+        if cfg.attention == "mla":
+            return attn.mla_specs(cfg, heads)
+        return attn.gqa_specs(cfg, heads, kv_heads)
+    if kind == "rec":
+        return rglru_lib.rglru_specs(cfg)
+    if kind == "ssm":
+        return ssm_lib.ssm_specs(cfg)
+    raise ValueError(f"unknown layer kind {kind}")
+
+
+def layer_specs(cfg, kind: str, heads: int, kv_heads: int) -> dict:
+    specs = {
+        "norm1": norm_specs(cfg),
+        "mixer": mixer_specs(cfg, kind, heads, kv_heads),
+    }
+    if cfg.moe:
+        specs["norm2"] = norm_specs(cfg)
+        specs["mlp"] = moe_lib.moe_specs(cfg)
+    elif cfg.d_ff:
+        specs["norm2"] = norm_specs(cfg)
+        specs["mlp"] = mlp_specs(cfg)
+    # d_ff == 0 (mamba2): mixer-only block, no MLP sublayer
+    return specs
+
+
+def apply_layer(cfg, p, kind: str, x, positions, cache, heads: int,
+                kv_heads: int):
+    h = apply_norm(cfg, p["norm1"], x)
+    h = constrain(h, "act_btd")
+    if kind in ATTN_KINDS:
+        if cfg.attention == "mla":
+            h, new_cache = attn.mla_attention(cfg, p["mixer"], h, kind,
+                                              positions, cache, heads)
+        else:
+            h, new_cache = attn.gqa_attention(cfg, p["mixer"], h, kind,
+                                              positions, cache, heads,
+                                              kv_heads)
+    elif kind == "rec":
+        h, new_cache = rglru_lib.apply_rglru(cfg, p["mixer"], h, cache)
+    else:
+        h, new_cache = ssm_lib.apply_ssm(cfg, p["mixer"], h, cache)
+    x = x + h
+    x = constrain(x, "act_btd")
+
+    aux = jnp.float32(0.0)
+    if "mlp" in p:
+        h = apply_norm(cfg, p["norm2"], x)
+        if cfg.moe:
+            h, aux = moe_lib.apply_moe(cfg, p["mlp"], h)
+        else:
+            h = apply_mlp(cfg, p["mlp"], h)
+        x = x + h
+        x = constrain(x, "act_btd")
+    return x, new_cache, aux
+
+
+def _stack(specs, n: int):
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init,
+                            s.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stack_specs(cfg, heads: int, kv_heads: int) -> dict:
+    kinds = cfg.layer_kinds()
+    p = len(cfg.layer_pattern)
+    n_full, rem = divmod(cfg.num_layers, p)
+    out: dict[str, Any] = {"groups": [], "rem": []}
+    if n_full:
+        for pos in range(p):
+            out["groups"].append(
+                _stack(layer_specs(cfg, cfg.layer_pattern[pos], heads,
+                                   kv_heads), n_full))
+    for i in range(rem):
+        out["rem"].append(layer_specs(cfg, kinds[n_full * p + i], heads,
+                                      kv_heads))
+    return out
+
+
+def mixer_cache_struct(cfg, kind: str, batch: int, max_len: int, dtype,
+                       kv_heads: int):
+    if kind in ATTN_KINDS:
+        if cfg.attention == "mla":
+            return attn.mla_cache_struct(cfg, batch, max_len, dtype)
+        # §Perf R1: local-attention layers keep an O(window) ring buffer
+        # (recurrentgemma long_500k: 524288 -> 2048 slots per layer).
+        # Chunked layers stay full-length (their sibling global layers need
+        # the full cache anyway — llama4 skips long_500k regardless).
+        if kind == "local" and cfg.local_window and max_len > cfg.local_window:
+            return attn.gqa_cache_struct(cfg, batch, cfg.local_window,
+                                         kv_heads, dtype)
+        return attn.gqa_cache_struct(cfg, batch, max_len, kv_heads, dtype)
+    if kind == "rec":
+        return rglru_lib.rglru_cache_struct(cfg, batch, dtype)
+    return ssm_lib.ssm_cache_struct(cfg, batch, dtype)
+
+
+def cache_structs(cfg, batch: int, max_len: int, dtype, kv_heads: int) -> dict:
+    """ShapeDtypeStruct pytree mirroring stack_specs group/rem layout."""
+    p = len(cfg.layer_pattern)
+    n_full, rem = divmod(cfg.num_layers, p)
+    kinds = cfg.layer_kinds()
+    out: dict[str, Any] = {"groups": [], "rem": []}
+    if n_full:
+        for pos in range(p):
+            one = mixer_cache_struct(cfg, cfg.layer_pattern[pos], batch,
+                                     max_len, dtype, kv_heads)
+            out["groups"].append(jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct((n_full,) + s.shape, s.dtype),
+                one))
+    for i in range(rem):
+        out["rem"].append(mixer_cache_struct(cfg, kinds[n_full * p + i],
+                                             batch, max_len, dtype, kv_heads))
+    return out
+
+
+def apply_stack(cfg, params, x, positions, caches, heads: int, kv_heads: int,
+                train: bool, remat: bool = True):
+    """Run the full layer stack. caches: None or cache_structs-shaped arrays."""
+    p = len(cfg.layer_pattern)
+    n_full = cfg.num_layers // p
+    aux_total = jnp.float32(0.0)
+    new_caches: dict[str, Any] = {"groups": [], "rem": []}
+
+    if n_full:
+        have_cache = caches is not None
+
+        def group_body(carry, xs):
+            xc, aux = carry
+            if have_cache:
+                group_params, group_caches = xs
+            else:
+                (group_params,) = xs
+                group_caches = None
+            outs = []
+            for pos in range(p):
+                cache_i = None if group_caches is None else group_caches[pos]
+                xc, nc, a = apply_layer(cfg, group_params[pos],
+                                        cfg.layer_pattern[pos], xc,
+                                        positions, cache_i, heads, kv_heads)
+                outs.append(nc)
+                aux = aux + a
+            return (xc, aux), (outs if have_cache else 0)
+
+        body = group_body
+        if train and remat:
+            import os
+            pol = os.environ.get("REPRO_REMAT", "nothing")
+            if pol == "none":
+                pass
+            elif pol == "dots":
+                body = jax.checkpoint(
+                    group_body,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            else:
+                body = jax.checkpoint(
+                    group_body,
+                    policy=jax.checkpoint_policies.nothing_saveable)
+        xs = ((params["groups"], caches["groups"]) if have_cache
+              else (params["groups"],))
+        (x, aux_total), scanned = jax.lax.scan(body, (x, aux_total), xs)
+        if have_cache:
+            new_caches["groups"] = scanned
+
+    kinds = cfg.layer_kinds()
+    for i, lp in enumerate(params["rem"]):
+        cache_i = caches["rem"][i] if caches is not None else None
+        x, nc, a = apply_layer(cfg, lp, kinds[n_full * p + i], x, positions,
+                               cache_i, heads, kv_heads)
+        aux_total = aux_total + a
+        if caches is not None:
+            new_caches["rem"].append(nc)
+
+    return x, (new_caches if caches is not None else None), aux_total

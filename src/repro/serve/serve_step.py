@@ -1,0 +1,115 @@
+"""Serving steps: jitted prefill / decode with donated caches + shardings.
+
+``make_serve_fns`` returns (prefill, decode) pjit'd callables; ``decode``
+donates the cache pytree so the 32k/500k KV buffers update in place. The
+request loop in serve/engine.py drives batched generation with these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.sharding.ctx import sharding_ctx
+from repro.sharding.rules import Rules
+
+
+def make_serve_fns(model: Model, rules: Optional[Rules] = None,
+                   max_len: int = 0):
+    def prefill(params, batch):
+        def run():
+            return model.prefill(params, batch, max_len=max_len)
+        if rules is not None:
+            with sharding_ctx(rules, rules.mesh):
+                return run()
+        return run()
+
+    def decode(params, tokens, caches, pos):
+        def run():
+            return model.decode_step(params, tokens, caches, pos)
+        if rules is not None:
+            with sharding_ctx(rules, rules.mesh):
+                return run()
+        return run()
+
+    return prefill, decode
+
+
+def prefill_input_structs(model: Model, batch: int, seq_len: int) -> dict:
+    cfg = model.cfg
+    s: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)}
+    if cfg.family == "audio":
+        s["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_len, cfg.d_model), model.compute_dtype)
+    if cfg.num_patches:
+        s["image_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_patches, cfg.d_model), model.compute_dtype)
+    return s
+
+
+def cache_shardings(rules: Rules, cache_struct) -> Any:
+    """Structural cache shardings (mirrors models' cache_structs layout).
+
+    KV caches: batch -> data axes; kv-heads -> model when shardable, else the
+    *sequence* dim -> model (flash-decoding combine via SPMD psum). MLA
+    compressed caches always sequence-shard. Recurrent/conv states shard
+    their channel dim over model where divisible (matching the TP layout of
+    the producing layer).
+    """
+    mesh = rules.mesh
+    b = rules.batch_axes or None
+    tp = int(mesh.shape.get("model", 1))
+
+    def named(parts):
+        return NamedSharding(mesh, P(*parts))
+
+    def mixer(tree, stacked: bool):
+        off = 1 if stacked else 0
+        lead = [None] * off
+
+        def kv(leaf):  # (L?, B, S, K, hd)
+            s = leaf.shape
+            parts = lead + [b, None, None, None]
+            if rules.kv_sharded and s[off + 2] % tp == 0:
+                parts[off + 2] = "model"
+            elif rules.seq_shard_cache and s[off + 1] % tp == 0:
+                parts[off + 1] = "model"
+            return named(parts)
+
+        def seqshard(leaf):  # (L?, B, S, R) — MLA compressed
+            s = leaf.shape
+            parts = lead + [b, None, None]
+            if rules.seq_shard_cache and s[off + 1] % tp == 0:
+                parts[off + 1] = "model"
+            return named(parts)
+
+        def chan_last(leaf):  # conv/recurrent states: channels last
+            s = leaf.shape
+            parts = lead + [b] + [None] * (len(s) - off - 1)
+            # widest trailing dim = channel dim of the TP-sharded layer
+            wide = max(range(off + 1, len(s)), key=lambda i: s[i])
+            if s[wide] % tp == 0 and s[wide] >= tp:
+                parts[wide] = "model"
+            return named(parts)
+
+        keys = set(tree.keys())
+        if keys == {"k", "v"}:
+            return {k: kv(v) for k, v in tree.items()}
+        if keys == {"ckv", "k_rope"}:
+            return {k: seqshard(v) for k, v in tree.items()}
+        return {k: chan_last(v) for k, v in tree.items()}
+
+    if set(cache_struct.keys()) == {"self", "cross"}:  # enc-dec
+        return {"self": mixer(cache_struct["self"], stacked=True),
+                "cross": tuple(
+                    mixer({"k": c, "v": c}, stacked=True)["k"]
+                    for c in cache_struct["cross"])}
+    return {"groups": [mixer(t, stacked=True)
+                       for t in cache_struct["groups"]],
+            "rem": [mixer(t, stacked=False)
+                    for t in cache_struct["rem"]]}

@@ -1,0 +1,47 @@
+"""Activation-sharding context.
+
+Model code calls ``constrain(x, role)`` at layout-critical points; outside a
+sharding context (CPU smoke tests) it is a no-op, inside pjit it applies
+``with_sharding_constraint`` with the PartitionSpec the active rule set maps
+that role to. Roles are semantic ("act_btd" = residual stream), so one model
+implementation serves every mesh/parallelism combination.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(rules, mesh: Mesh):
+    prev = (current_rules(), current_mesh())
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def constrain(x, role: str):
+    rules, mesh = current_rules(), current_mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = rules.activation_spec(role, x.ndim)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))

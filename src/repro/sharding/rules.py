@@ -1,0 +1,192 @@
+"""Logical-axis → mesh-axis sharding rules.
+
+One rule set serves every arch / shape cell:
+
+  params:      vocab/heads/kv/mlp/experts/inner -> "model" (TP/EP),
+               embed -> "data" (ZeRO/FSDP: weights+optimizer sharded, SPMD
+               all-gathers per use inside the layer scan), rest replicated.
+  activations: batch -> ("pod","data") where divisible; Megatron-style
+               sequence parallelism (seq -> "model") on the residual stream
+               in train/prefill; decode KV caches shard the *sequence* dim
+               over "model" when KV heads can't (flash-decoding combine is
+               then SPMD's psum over the score reduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import ParamSpec
+
+TP_AXES = ("vocab", "heads", "mlp", "experts", "inner")
+
+
+def _env_spec(var: str, default: P, b) -> P:
+    """Hillclimb hook: override an activation spec via env var, e.g.
+    REPRO_MOE_BECD="b,none,none,none". 'b' maps to the batch axes."""
+    import os
+    raw = os.environ.get(var)
+    if not raw:
+        return default
+    parts = []
+    for tok in raw.split(","):
+        tok = tok.strip().lower()
+        parts.append(b if tok == "b" else None if tok in ("none", "")
+                     else tok)
+    return P(*parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    mode: str                   # train | prefill | decode
+    batch_axes: tuple           # axes usable for the global batch dim
+    kv_sharded: bool = True
+    seq_parallel: bool = True   # residual-stream sequence parallelism
+    seq_shard_cache: bool = True
+    no_tp: bool = False         # 'model' axis used as extra DP
+
+    # ------------------------------------------------------------ params
+
+    def param_pspec(self, spec: ParamSpec) -> P:
+        used: set[str] = set()
+        out = []
+        dsz = mesh_axis_size(self.mesh, "data")
+        msz = mesh_axis_size(self.mesh, "model")
+        for i, ax in enumerate(spec.axes):
+            tgt = None
+            if self.no_tp:
+                # ZeRO over BOTH axes: with TP off, the idle 'model' axis
+                # still shards master+optimizer state (the replicated-state
+                # floor otherwise overflows 16 GiB — §Perf Q1b).
+                if ax == "embed":
+                    dim = spec.shape[i]
+                    if dim % (dsz * msz) == 0:
+                        tgt = ("data", "model")
+                    elif dim % dsz == 0:
+                        tgt = "data"
+            elif ax in TP_AXES:
+                tgt = "model"
+            elif ax == "kv" and self.kv_sharded:
+                tgt = "model"
+            elif ax == "embed":
+                tgt = "data"
+            names = (tgt if isinstance(tgt, tuple) else (tgt,)) \
+                if tgt is not None else ()
+            if tgt is not None and not (set(names) & used):
+                used.update(names)
+                out.append(tgt)
+            else:
+                out.append(None)
+        return P(*out)
+
+    def param_sharding(self, spec: ParamSpec) -> NamedSharding:
+        return NamedSharding(self.mesh, self.param_pspec(spec))
+
+    def param_shardings(self, specs) -> dict:
+        return jax.tree_util.tree_map(
+            self.param_sharding, specs,
+            is_leaf=lambda x: isinstance(x, ParamSpec))
+
+    # --------------------------------------------------------- activations
+
+    @property
+    def _b(self):
+        return self.batch_axes if self.batch_axes else None
+
+    def activation_spec(self, role: str, ndim: int) -> Optional[P]:
+        b = self._b
+        if self.no_tp:
+            # model axis is part of b; nothing else is model-sharded
+            table_nt = {
+                "act_btd": P(b, None, None),
+                "act_bti": P(b, None, None),
+                "act_bshd": P(b, None, None, None),
+                "act_bskd": P(b, None, None, None),
+                "cache_bskd": P(b, None, None, None),
+                "cache_bsr": P(b, None, None),
+                "logits_btv": P(b, None, None),
+            }
+            spec = table_nt.get(role)
+            return spec if spec is not None and ndim == len(spec) else None
+        seq_tp = "model" if (self.seq_parallel
+                             and self.mode in ("train", "prefill")) else None
+        kv_tp = "model" if self.kv_sharded else None
+        cache_seq = None if self.kv_sharded else (
+            "model" if self.seq_shard_cache else None)
+        table = {
+            "act_btd": P(b, seq_tp, None),
+            "act_bti": P(b, None, "model"),
+            "act_bshd": P(b, None, "model", None),
+            "act_bskd": P(b, None, kv_tp, None),
+            "cache_bskd": (P(b, cache_seq, kv_tp, None)
+                           if self.mode == "decode"
+                           else P(b, None, kv_tp, None)),
+            "cache_bsr": P(b, "model" if self.seq_shard_cache else None,
+                           None),
+            "logits_btv": P(b, None, "model"),
+            "moe_ecd": P("model", "data", None),
+            "moe_ecf": P("model", "data", None),
+            "moe_becd": _env_spec("REPRO_MOE_BECD", P(b, "model", None, None), b),
+            "moe_becf": _env_spec("REPRO_MOE_BECF", P(b, "model", None, None), b),
+            "moe_btkd": _env_spec("REPRO_MOE_BTKD", P(b, "model", None), b),
+        }
+        spec = table.get(role)
+        if spec is None or ndim != len(spec):
+            return None
+        return spec
+
+    def batch_pspec(self, extra_dims: int = 1) -> P:
+        return P(self._b, *([None] * extra_dims))
+
+
+def mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return int(mesh.shape.get(name, 1))
+
+
+def make_rules(mesh: Mesh, mode: str, global_batch: int,
+               kv_sharded: bool = True, seq_parallel: bool = True,
+               seq_shard_cache: bool = True,
+               no_tp: bool = False) -> Rules:
+    """Pick the largest batch-axis prefix that divides global_batch.
+
+    no_tp: treat the 'model' axis as extra data parallelism — replicate
+    weights (except FSDP dims) and shard the batch over it too. The right
+    call for small dense models where TP-16 activation collectives dominate
+    (§Perf Q-series).
+    """
+    if no_tp:
+        candidates = [ax for ax in ("pod", "data", "model")
+                      if ax in mesh.axis_names]
+        chosen_nt: list[str] = []
+        size = 1
+        for ax in candidates:
+            s = mesh_axis_size(mesh, ax)
+            if global_batch % (size * s) == 0:
+                chosen_nt.append(ax)
+                size *= s
+        return Rules(mesh=mesh, mode=mode, batch_axes=tuple(chosen_nt),
+                     kv_sharded=False, seq_parallel=False,
+                     seq_shard_cache=False, no_tp=True)
+    candidates = [ax for ax in ("pod", "data") if ax in mesh.axis_names]
+    chosen: list[str] = []
+    size = 1
+    # greedily take axes while divisibility holds (pod first, then data)
+    for ax in candidates:
+        s = mesh_axis_size(mesh, ax)
+        if global_batch % (size * s) == 0:
+            chosen.append(ax)
+            size *= s
+    # fall back: try data alone if pod+data failed but data divides
+    if not chosen and "data" in mesh.axis_names:
+        s = mesh_axis_size(mesh, "data")
+        if global_batch % s == 0:
+            chosen = ["data"]
+    return Rules(mesh=mesh, mode=mode, batch_axes=tuple(chosen),
+                 kv_sharded=kv_sharded, seq_parallel=seq_parallel,
+                 seq_shard_cache=seq_shard_cache)

@@ -1,0 +1,93 @@
+"""Checkpoint / restart: sharded-state save + mesh-flexible restore.
+
+Format: one .npz per top-level state group (params / opt m / opt v) holding
+flattened tree leaves keyed by tree path, plus manifest.json (step, arch,
+mesh shape, data-pipeline state, RNG streams). Restore re-shards onto
+whatever mesh the new job runs (elastic scaling: shardings are recomputed
+from the rule set, not read from disk).
+
+On a real pod each host writes its addressable shards (process-local npz)
+— here the single CPU process writes the whole array; the layout and the
+manifest contract are the same.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten_like(tree, flat: dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    treedef = jax.tree_util.tree_structure(tree)
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params, opt_state,
+                    manifest_extra: Optional[dict] = None) -> str:
+    """Atomic-ish: write into step dir then drop a DONE marker."""
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    np.savez(os.path.join(d, "params.npz"), **_flatten(params))
+    np.savez(os.path.join(d, "opt_m.npz"), **_flatten(opt_state["m"]))
+    np.savez(os.path.join(d, "opt_v.npz"), **_flatten(opt_state["v"]))
+    manifest = {"step": step,
+                "opt_step": int(np.asarray(opt_state["step"])),
+                **(manifest_extra or {})}
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(os.path.join(d, "DONE"), "w") as f:
+        f.write("ok")
+    return d
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    done = [d for d in sorted(os.listdir(ckpt_dir))
+            if d.startswith("step_")
+            and os.path.exists(os.path.join(ckpt_dir, d, "DONE"))]
+    return os.path.join(ckpt_dir, done[-1]) if done else None
+
+
+def load_checkpoint(path: str, params_like, opt_like,
+                    shardings=None) -> tuple[Any, Any, dict]:
+    """Restore (params, opt_state, manifest); re-shard if shardings given."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    params = _unflatten_like(params_like,
+                             dict(np.load(os.path.join(path, "params.npz"))))
+    m = _unflatten_like(opt_like["m"],
+                        dict(np.load(os.path.join(path, "opt_m.npz"))))
+    v = _unflatten_like(opt_like["v"],
+                        dict(np.load(os.path.join(path, "opt_v.npz"))))
+    import jax.numpy as jnp
+    opt_state = {"m": m, "v": v,
+                 "step": jnp.asarray(manifest["opt_step"], jnp.int32)}
+    if shardings is not None:
+        params = jax.device_put(params, shardings["params"])
+        opt_state["m"] = jax.device_put(m, shardings["params"])
+        opt_state["v"] = jax.device_put(v, shardings["params"])
+    return params, opt_state, manifest

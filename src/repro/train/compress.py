@@ -1,0 +1,49 @@
+"""Int8 gradient compression with error feedback (cross-pod DP sync).
+
+Quantize per-tensor symmetric int8 → all-reduce the small payload → dequant;
+the quantization residual is carried in an error-feedback buffer so the
+compression bias vanishes over steps (EF-SGD). Used by the explicit
+shard_map DP-sync variant; the implicit-SPMD path reduces full-precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_buffers(grads):
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_psum(grads, error, axis_name: str):
+    """EF-int8 all-reduce of a gradient pytree inside shard_map.
+
+    Returns (reduced grads, new error buffers). Scales are psum-maxed so all
+    devices dequantize identically.
+    """
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+        scale = jax.lax.pmax(scale, axis_name)
+        q = jnp.clip(jnp.round(x / scale), -127, 127)
+        new_e = x - q * scale
+        total = jax.lax.psum(q, axis_name) * scale
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        return (total / n).astype(g.dtype), new_e
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+            jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]))

@@ -1,0 +1,93 @@
+"""Train step factory: microbatch-accumulated, remat'd, sharded AdamW step.
+
+The step is a pure function (params, opt_state, batch) -> (params, opt_state,
+metrics), jit-compiled with explicit in/out shardings and donated state. The
+global batch arrives as (accum, micro_batch, seq); a lax.scan accumulates
+gradients so peak activation memory is one microbatch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.sharding.ctx import sharding_ctx
+from repro.sharding.rules import Rules
+from repro.train.optimizer import AdamWConfig, adamw_update
+
+
+def make_loss_fn(model: Model):
+    def loss_fn(params, micro):
+        return model.loss(params, micro)
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    rules: Optional[Rules] = None):
+    loss_fn = make_loss_fn(model)
+
+    def train_step(params, opt_state, batch):
+        """batch leaves have leading (accum, micro_batch, ...) dims."""
+        accum = jax.tree_util.tree_leaves(batch)[0].shape[0]
+
+        def run():
+            # (§Perf L3 — hoisting a bf16 master cast out of the scan — was
+            # measured a no-op on collectives and +0.8 GiB memory: XLA
+            # already reorders cast-before-gather. Reverted.)
+            def mb_grads(micro):
+                return jax.value_and_grad(loss_fn)(params, micro)
+
+            def body(carry, micro):
+                loss_acc, g_acc = carry
+                loss, g = mb_grads(micro)
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+                return (loss_acc + loss, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), g0), batch)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+            new_params, new_opt, metrics = adamw_update(
+                opt_cfg, grads, opt_state, params)
+            metrics["loss"] = loss_sum / accum
+            return new_params, new_opt, metrics
+
+        if rules is not None:
+            with sharding_ctx(rules, rules.mesh):
+                return run()
+        return run()
+
+    return train_step
+
+
+def batch_struct(model: Model, global_batch: int, seq_len: int,
+                 accum: int = 1) -> dict:
+    """ShapeDtypeStruct batch for lowering (tokens/labels + modality stubs)."""
+    cfg = model.cfg
+    mb = global_batch // accum
+    s: dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((accum, mb, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((accum, mb, seq_len), jnp.int32),
+    }
+    if cfg.family == "audio":
+        s["frames"] = jax.ShapeDtypeStruct(
+            (accum, mb, cfg.encoder_len, cfg.d_model), model.compute_dtype)
+    if cfg.num_patches:
+        s["image_embeds"] = jax.ShapeDtypeStruct(
+            (accum, mb, cfg.num_patches, cfg.d_model), model.compute_dtype)
+    return s
+
+
+def batch_shardings(rules: Rules, batch_s) -> dict:
+    """Microbatch dims: (accum=None, batch=batch_axes, rest None)."""
+    def spec(s):
+        return NamedSharding(
+            rules.mesh, P(None, rules.batch_axes or None,
+                          *([None] * (len(s.shape) - 2))))
+    return jax.tree_util.tree_map(spec, batch_s)

@@ -1,0 +1,10 @@
+"""Pytest config: make tests/helpers.py importable and keep CPU defaults.
+
+NOTE (assignment spec): XLA_FLAGS / host-device-count is NOT set here —
+smoke tests and benches must see 1 device; multi-device tests spawn
+subprocesses via helpers.run_with_devices.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

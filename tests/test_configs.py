@@ -1,0 +1,78 @@
+"""Assigned-architecture configs: exact spec fields + size validation."""
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config
+
+# (layers, d_model, heads, kv, d_ff, vocab) straight from the assignment
+ASSIGNED = {
+    "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+    "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+    "stablelm-1.6b": (24, 2048, 32, 32, 5632, 100352),
+    "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+    "whisper-medium": (24, 1024, 16, 16, 4096, 51865),
+    "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+    "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+    "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+}
+
+# stated sizes (billions) with tolerance — catches config drift
+SIZES = {
+    "qwen1.5-0.5b": (0.46, 0.15), "phi3-medium-14b": (14.0, 0.15),
+    "stablelm-1.6b": (1.6, 0.15), "minicpm3-4b": (4.0, 0.15),
+    "llama4-scout-17b-a16e": (109.0, 0.1), "qwen3-moe-235b-a22b": (235.0, 0.05),
+    "whisper-medium": (0.77, 0.15), "mamba2-130m": (0.13, 0.15),
+    "phi-3-vision-4.2b": (4.0, 0.15), "recurrentgemma-2b": (2.7, 0.15),
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_assigned_fields_exact(arch):
+    cfg = get_config(arch)
+    l, d, h, kv, ff, v = ASSIGNED[arch]
+    assert cfg.num_layers == l
+    assert cfg.d_model == d
+    assert cfg.num_heads == h
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_near_stated(arch):
+    cfg = get_config(arch)
+    n = cfg.num_params() / 1e9
+    target, tol = SIZES[arch]
+    assert abs(n - target) / target < max(tol, 0.35), (n, target)
+
+
+def test_moe_active_params():
+    q = get_config("qwen3-moe-235b-a22b")
+    assert abs(q.num_active_params() / 1e9 - 22.0) < 2.0  # A22B
+    l = get_config("llama4-scout-17b-a16e")
+    assert abs(l.num_active_params() / 1e9 - 17.0) < 2.5  # 17B active
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_is_same_family(arch):
+    cfg = get_config(arch)
+    r = cfg.reduced()
+    assert r.family == cfg.family
+    assert r.moe == cfg.moe
+    assert r.attention == cfg.attention
+    assert r.layer_pattern == cfg.layer_pattern
+    assert r.vocab_size <= 1024  # genuinely reduced
+    assert r.d_model <= 256
+
+
+def test_subquadratic_flags():
+    assert get_config("mamba2-130m").is_subquadratic
+    assert get_config("recurrentgemma-2b").is_subquadratic
+    for a in ("qwen1.5-0.5b", "llama4-scout-17b-a16e", "whisper-medium"):
+        assert not get_config(a).is_subquadratic
+
+
+def test_registry_rejects_unknown():
+    with pytest.raises(KeyError):
+        get_config("not-a-model")

@@ -1,0 +1,170 @@
+"""PBA generator: two-phase attachment invariants, BA-limit statistics."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (FactionSpec, PBAConfig, block_factions,
+                        degree_counts, fit_power_law, generate_pba_host,
+                        make_factions, sampled_path_stats,
+                        community_contrast, serial_ba_reference)
+from repro.core.pba import occurrence_rank, resolve_pointers
+
+from helpers import run_with_devices
+
+
+def test_occurrence_rank():
+    a = jnp.asarray([3, 1, 3, 3, 1, 0], jnp.int32)
+    occ = np.asarray(occurrence_rank(a))
+    np.testing.assert_array_equal(occ, [0, 0, 1, 2, 1, 0])
+
+
+def test_resolve_pointers_chain():
+    # 0,1 terminal; chain 5->4->3->2->0
+    terminal = jnp.asarray([True, True, False, False, False, False])
+    ptr = jnp.asarray([0, 1, 0, 2, 3, 4], jnp.int32)
+    out = np.asarray(resolve_pointers(ptr, terminal))
+    np.testing.assert_array_equal(out, [0, 1, 0, 0, 0, 0])
+
+
+def test_counts_conservation_and_no_drops():
+    table = make_factions(8, FactionSpec(4, 2, 4, seed=2))
+    cfg = PBAConfig(vertices_per_proc=500, edges_per_vertex=4,
+                    interfaction_prob=0.05, seed=11)
+    edges, stats = generate_pba_host(cfg, table)
+    assert stats.requested_edges == 8 * 500 * 4
+    assert stats.dropped_edges == 0
+    s, d = edges.to_numpy()
+    assert len(s) == stats.emitted_edges
+    # every source vertex appears exactly k times
+    src_counts = np.bincount(s, minlength=stats.num_vertices)
+    np.testing.assert_array_equal(src_counts,
+                                  np.full(stats.num_vertices, 4))
+    # endpoints are valid global vertex ids
+    assert d.min() >= 0 and d.max() < stats.num_vertices
+
+
+def test_determinism():
+    table = make_factions(4, FactionSpec(2, 2, 3, seed=0))
+    cfg = PBAConfig(vertices_per_proc=100, edges_per_vertex=3, seed=5)
+    e1, _ = generate_pba_host(cfg, table)
+    e2, _ = generate_pba_host(cfg, table)
+    np.testing.assert_array_equal(np.asarray(e1.src), np.asarray(e2.src))
+    np.testing.assert_array_equal(np.asarray(e1.dst), np.asarray(e2.dst))
+
+
+def test_seed_changes_graph():
+    table = make_factions(4, FactionSpec(2, 2, 3, seed=0))
+    e1, _ = generate_pba_host(PBAConfig(100, 3, seed=5), table)
+    e2, _ = generate_pba_host(PBAConfig(100, 3, seed=6), table)
+    assert (np.asarray(e1.dst) != np.asarray(e2.dst)).any()
+
+
+def test_power_law_gamma_range():
+    # Paper Fig. 4: fitted gamma > 2 for PBA graphs.
+    table = make_factions(8, FactionSpec(4, 2, 4, seed=1))
+    cfg = PBAConfig(vertices_per_proc=4000, edges_per_vertex=4,
+                    interfaction_prob=0.05, seed=7)
+    edges, _ = generate_pba_host(cfg, table)
+    deg = np.asarray(degree_counts(edges))
+    fit = fit_power_law(deg, kmin=5)
+    assert 2.0 < fit.gamma_mle < 3.6, fit
+    assert 1.5 < fit.gamma_ls < 4.5, fit
+
+
+def test_small_world():
+    # Paper Table 2: short avg path length, small diameter.
+    table = make_factions(8, FactionSpec(4, 2, 4, seed=1))
+    cfg = PBAConfig(vertices_per_proc=2000, edges_per_vertex=4, seed=7)
+    edges, _ = generate_pba_host(cfg, table)
+    ps = sampled_path_stats(edges, num_sources=8)
+    assert ps.avg_path_length < 8.0
+    assert ps.diameter_estimate <= 16
+    assert ps.reachable_fraction > 0.95
+
+
+def test_faction_structure_creates_communities():
+    # Paper Fig. 5: block factions => block community structure.
+    table = block_factions(8, 2)
+    cfg = PBAConfig(vertices_per_proc=1000, edges_per_vertex=4,
+                    interfaction_prob=0.02, seed=3)
+    edges, _ = generate_pba_host(cfg, table)
+    contrast = community_contrast(edges, num_blocks=4)
+    assert contrast > 2.0, contrast
+
+
+def test_interfaction_prob_spreads_edges():
+    table = block_factions(8, 2)
+    lo, _ = generate_pba_host(
+        PBAConfig(500, 4, interfaction_prob=0.0, seed=3), table)
+    hi, _ = generate_pba_host(
+        PBAConfig(500, 4, interfaction_prob=0.5, seed=3), table)
+    assert community_contrast(hi, 4) < community_contrast(lo, 4)
+
+
+def test_capacity_overflow_is_counted_not_crashed():
+    table = make_factions(4, FactionSpec(2, 2, 2, seed=0))
+    cfg = PBAConfig(vertices_per_proc=500, edges_per_vertex=4,
+                    pair_capacity=16, seed=1)  # absurdly small on purpose
+    edges, stats = generate_pba_host(cfg, table)
+    assert stats.dropped_edges > 0
+    assert stats.emitted_edges + stats.dropped_edges == stats.requested_edges
+    s, d = edges.to_numpy()
+    assert len(s) == stats.emitted_edges
+
+
+def test_serial_ba_reference_gamma():
+    edges = serial_ba_reference(4000, 4, seed=0)
+    deg = np.asarray(degree_counts(edges))
+    fit = fit_power_law(deg, kmin=5)
+    assert 2.3 < fit.gamma_mle < 3.4  # BA theory: gamma = 3
+
+
+def test_pba_vs_serial_ba_statistics():
+    """P=1 PBA should match serial BA's degree statistics (not exact edges)."""
+    table = make_factions(1, FactionSpec(1, 1, 1, seed=0))
+    cfg = PBAConfig(vertices_per_proc=4000, edges_per_vertex=4, seed=2,
+                    interfaction_prob=0.0)
+    e_pba, _ = generate_pba_host(cfg, table)
+    e_ser = serial_ba_reference(4000, 4, seed=2)
+    d_pba = np.sort(np.asarray(degree_counts(e_pba)))[::-1]
+    d_ser = np.sort(np.asarray(degree_counts(e_ser)))[::-1]
+    g_pba = fit_power_law(d_pba, kmin=5).gamma_mle
+    g_ser = fit_power_law(d_ser, kmin=5).gamma_mle
+    assert abs(g_pba - g_ser) < 0.4, (g_pba, g_ser)
+
+
+def test_distributed_matches_host_8dev():
+    run_with_devices("""
+        import numpy as np
+        from repro.core import *
+        table = make_factions(8, FactionSpec(4, 2, 4, seed=1))
+        cfg = PBAConfig(vertices_per_proc=300, edges_per_vertex=3,
+                        interfaction_prob=0.05, seed=7)
+        e_d, st_d = generate_pba(cfg, table)
+        e_h, st_h = generate_pba_host(cfg, table)
+        np.testing.assert_array_equal(np.asarray(e_d.src), np.asarray(e_h.src))
+        np.testing.assert_array_equal(np.asarray(e_d.dst), np.asarray(e_h.dst))
+        assert st_d.dropped_edges == st_h.dropped_edges
+        print("OK")
+    """, 8)
+
+
+def test_logical_procs_sharded_matches_host_4dev():
+    """Paper-scale config: more logical processors than devices (1000-proc
+    MPI runs on a 256-chip pod). Must be bit-identical to host mode."""
+    run_with_devices("""
+        import numpy as np
+        from repro.core import (make_factions, FactionSpec, PBAConfig,
+                                generate_pba_host, generate_pba_sharded)
+        table = make_factions(16, FactionSpec(8, 2, 6, seed=2))
+        cfg = PBAConfig(vertices_per_proc=200, edges_per_vertex=3,
+                        interfaction_prob=0.05, seed=9)
+        e_s, st_s = generate_pba_sharded(cfg, table)
+        e_h, st_h = generate_pba_host(cfg, table)
+        np.testing.assert_array_equal(np.asarray(e_s.src).reshape(-1),
+                                      np.asarray(e_h.src).reshape(-1))
+        np.testing.assert_array_equal(np.asarray(e_s.dst).reshape(-1),
+                                      np.asarray(e_h.dst).reshape(-1))
+        assert st_s.dropped_edges == st_h.dropped_edges
+        print("OK")
+    """, 4)

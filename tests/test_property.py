@@ -1,0 +1,97 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FactionSpec, PBAConfig, PKConfig, degree_counts,
+                        generate_pba_host, generate_pk_host, make_factions,
+                        star_clique_seed, dense_power_seed, pk_sizes)
+from repro.core.pba import occurrence_rank
+from repro.core.pk import decompose_base
+from repro.kernels import ref
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+@given(st.integers(2, 6), st.integers(2, 4))
+@SETTINGS
+def test_pk_edge_count_exact_power(n0, levels):
+    seed = star_clique_seed(n0)
+    cfg = PKConfig(levels=levels)
+    n, e = pk_sizes(seed, cfg)
+    _, stats = generate_pk_host(seed, cfg)
+    assert stats.emitted_edges == e == seed.num_edges ** levels
+    assert stats.num_vertices == n == n0 ** levels
+
+
+@given(st.integers(2, 6), st.integers(2, 4), st.integers(0, 100))
+@SETTINGS
+def test_pk_endpoints_in_range(n0, levels, rseed):
+    seed = dense_power_seed(n0, 2, seed=rseed)
+    edges, _ = generate_pk_host(seed, PKConfig(levels=levels))
+    s, d = edges.to_numpy()
+    n = n0 ** levels
+    assert s.min() >= 0 and s.max() < n
+    assert d.min() >= 0 and d.max() < n
+
+
+@given(st.integers(1, 8), st.integers(1, 6), st.integers(0, 50))
+@SETTINGS
+def test_pba_degree_sum_invariant(num_procs, k, seed):
+    table = make_factions(num_procs,
+                          FactionSpec(2, 1, max(num_procs // 2, 1), seed=seed))
+    cfg = PBAConfig(vertices_per_proc=64, edges_per_vertex=k, seed=seed)
+    edges, stats = generate_pba_host(cfg, table)
+    deg = np.asarray(degree_counts(edges))
+    # sum of degrees == 2 * emitted edges (undirected view)
+    assert deg.sum() == 2 * stats.emitted_edges
+    assert stats.emitted_edges + stats.dropped_edges == stats.requested_edges
+
+
+@given(st.lists(st.integers(0, 9), min_size=1, max_size=200))
+@SETTINGS
+def test_occurrence_rank_property(vals):
+    a = jnp.asarray(vals, jnp.int32)
+    occ = np.asarray(occurrence_rank(a))
+    want = np.zeros(len(vals), np.int64)
+    seen: dict[int, int] = {}
+    for i, v in enumerate(vals):
+        want[i] = seen.get(v, 0)
+        seen[v] = want[i] + 1
+    np.testing.assert_array_equal(occ, want)
+
+
+@given(st.integers(2, 50), st.integers(1, 8),
+       st.integers(0, 2**31 - 1))
+@SETTINGS
+def test_decompose_base_is_inverse(base, levels, t):
+    t = t % (base ** levels)
+    digits = decompose_base(t, base, levels)
+    assert (digits >= 0).all() and (digits < base).all()
+    back = 0
+    for d in digits:
+        back = back * base + int(d)
+    assert back == t
+
+
+@given(st.integers(1, 2000), st.integers(1, 400), st.integers(0, 99))
+@SETTINGS
+def test_histogram_ref_total_mass(m, nbins, seed):
+    rng = np.random.default_rng(seed)
+    v = jnp.asarray(rng.integers(0, nbins, m), jnp.int32)
+    h = np.asarray(ref.histogram_ref(v, nbins))
+    assert h.sum() == m
+    np.testing.assert_array_equal(h, np.bincount(np.asarray(v), minlength=nbins))
+
+
+@given(st.integers(2, 1000), st.integers(0, 99))
+@SETTINGS
+def test_resolve_converges_for_downward_chains(m, seed):
+    rng = np.random.default_rng(seed)
+    ptr = np.minimum(rng.integers(0, m, m), np.maximum(np.arange(m) - 1, 0))
+    ptr[0] = 0
+    from repro.core.pba import resolve_pointers
+    terminal = jnp.asarray(np.arange(m) < max(1, m // 10))
+    p = jnp.asarray(np.where(np.asarray(terminal), np.arange(m), ptr), jnp.int32)
+    out = np.asarray(resolve_pointers(p, terminal))
+    assert np.asarray(terminal)[out].all()  # everyone landed on a terminal

@@ -1,0 +1,106 @@
+"""Sharding rules: param/activation spec correctness for every regime."""
+import os
+
+import numpy as np
+import pytest
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.layers import ParamSpec
+from repro.sharding.rules import Rules, make_rules
+
+pytestmark = pytest.mark.filterwarnings("ignore::DeprecationWarning")
+
+
+def _mesh2d():
+    # a fake 2-axis mesh over 1 device via named shape trick is not possible;
+    # use the real single device with axis sizes 1x1 for spec-only tests.
+    dev = np.array(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_param_specs_tp():
+    rules = make_rules(_mesh2d(), "train", 8)
+    spec = ParamSpec((1024, 16, 64), ("embed", "heads", None))
+    assert rules.param_pspec(spec) == P("data", "model", None)
+    spec = ParamSpec((151936, 1024), ("vocab", "embed"))
+    assert rules.param_pspec(spec) == P("model", "data")
+    # no mesh axis may appear twice
+    spec = ParamSpec((64, 64), ("mlp", "heads"))
+    ps = rules.param_pspec(spec)
+    assert ps == P("model", None)
+
+
+def test_param_specs_no_tp_zero3():
+    # divisibility logic needs real axis sizes: fake a 16x16 mesh (Rules
+    # only reads .shape / .axis_names on this path)
+    from types import SimpleNamespace
+    fake = SimpleNamespace(shape={"data": 16, "model": 16},
+                           axis_names=("data", "model"))
+    rules = Rules(mesh=fake, mode="train", batch_axes=("data", "model"),
+                  no_tp=True)
+    spec = ParamSpec((1024, 16, 64), ("embed", "heads", None))
+    # embed shards over both axes (ZeRO), heads replicated
+    assert rules.param_pspec(spec) == P(("data", "model"), None, None)
+    # 16-divisible but not 256-divisible -> data only
+    spec = ParamSpec((48, 64), ("embed", "mlp"))
+    assert rules.param_pspec(spec) == P("data", None)
+    # indivisible -> replicated
+    spec = ParamSpec((3, 5), ("embed", "mlp"))
+    assert rules.param_pspec(spec) == P(None, None)
+
+
+def test_kv_unsharded_when_indivisible():
+    rules = make_rules(_mesh2d(), "train", 8, kv_sharded=False)
+    spec = ParamSpec((1024, 10, 128), ("embed", "kv", None))
+    assert rules.param_pspec(spec) == P("data", None, None)
+
+
+def test_activation_specs_by_mode():
+    mesh = _mesh2d()
+    train = make_rules(mesh, "train", 8)
+    assert train.activation_spec("act_btd", 3) == P(("data",), "model", None)
+    decode = make_rules(mesh, "decode", 8)
+    assert decode.activation_spec("act_btd", 3) == P(("data",), None, None)
+    # decode with unshardable kv heads -> sequence-sharded cache
+    dec2 = make_rules(mesh, "decode", 8, kv_sharded=False)
+    assert dec2.activation_spec("cache_bskd", 4) == P(("data",), "model",
+                                                      None, None)
+    # shardable kv heads -> heads-sharded cache
+    dec3 = make_rules(mesh, "decode", 8, kv_sharded=True)
+    assert dec3.activation_spec("cache_bskd", 4) == P(("data",), None,
+                                                      "model", None)
+
+
+def test_batch_axes_divisibility():
+    mesh = _mesh2d()
+    r = make_rules(mesh, "decode", 1)   # batch=1: nothing divides
+    assert r.batch_axes == ("data",) or r.batch_axes == ()
+    # with axis size 1 everything divides; semantic check is the rule logic
+    r2 = make_rules(mesh, "train", 0 or 8)
+    assert isinstance(r2.batch_axes, tuple)
+
+
+def test_env_override_spec(monkeypatch):
+    monkeypatch.setenv("REPRO_MOE_BECD", "b,none,none,none")
+    rules = make_rules(_mesh2d(), "train", 8)
+    assert rules.activation_spec("moe_becd", 4) == P(("data",), None, None,
+                                                     None)
+    monkeypatch.delenv("REPRO_MOE_BECD")
+
+
+def test_wide_trailing_dim_rule_matches_models():
+    """Every ParamSpec in every full model maps to a valid PartitionSpec
+    under both TP and no-TP rules (all dims divisible or unsharded)."""
+    from repro.configs import ARCH_IDS, get_config
+    from repro.models import build_model
+    mesh = _mesh2d()
+    for arch in ARCH_IDS:
+        model = build_model(get_config(arch), tp=16)
+        rules = make_rules(mesh, "train", 256, kv_sharded=model.kv_sharded)
+        specs = model.param_specs()
+        shardings = rules.param_shardings(specs)
+        n_specs = len(jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, ParamSpec)))
+        n_sh = len(jax.tree_util.tree_leaves(shardings))
+        assert n_specs == n_sh

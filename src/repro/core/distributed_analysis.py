@@ -11,16 +11,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.graph import EdgeList
-
-
-def _device_mesh(mesh: Optional[Mesh], axis_name: str) -> Mesh:
-    if mesh is not None:
-        return mesh
-    return Mesh(np.array(jax.devices()), (axis_name,))
+from repro.runtime import blocking, spmd
 
 
 def degree_counts_sharded(edges: EdgeList, mesh: Optional[Mesh] = None,
@@ -34,10 +28,10 @@ def degree_counts_sharded(edges: EdgeList, mesh: Optional[Mesh] = None,
     launch, matching the kernel's BIN_BLOCK tiling.
     """
     from repro.kernels import ops as kops
-    mesh = _device_mesh(mesh, axis_name)
+    mesh = spmd.ensure_mesh(mesh, axis_name=axis_name)
     n = edges.num_vertices
-    src = edges.src.reshape(len(mesh.devices.flat), -1)
-    dst = edges.dst.reshape(len(mesh.devices.flat), -1)
+    src = edges.src.reshape(spmd.mesh_size(mesh), -1)
+    dst = edges.dst.reshape(spmd.mesh_size(mesh), -1)
 
     def body(s_blk, d_blk):
         s = s_blk.reshape(-1)
@@ -47,9 +41,9 @@ def degree_counts_sharded(edges: EdgeList, mesh: Optional[Mesh] = None,
         d = jnp.where(valid, d, n)
         both = jnp.concatenate([s, d])
         counts = kops.histogram(both, n + 1)[:n]
-        return jax.lax.psum(counts, axis_name)[None]
+        return blocking.all_reduce_sum(counts, axis_name)[None]
 
-    out = jax.jit(jax.shard_map(
+    out = jax.jit(spmd.shard_map(
         body, mesh=mesh, in_specs=(P(axis_name, None), P(axis_name, None)),
         out_specs=P(axis_name, None), check_vma=False))(src, dst)
     return out[0]
@@ -58,17 +52,17 @@ def degree_counts_sharded(edges: EdgeList, mesh: Optional[Mesh] = None,
 def edge_count_sharded(edges: EdgeList, mesh: Optional[Mesh] = None,
                        axis_name: str = "proc") -> int:
     """Global valid-edge count without gathering the edge list."""
-    mesh = _device_mesh(mesh, axis_name)
-    src = edges.src.reshape(len(mesh.devices.flat), -1)
+    mesh = spmd.ensure_mesh(mesh, axis_name=axis_name)
+    src = edges.src.reshape(spmd.mesh_size(mesh), -1)
 
     def body(s_blk):
         c = jnp.sum(s_blk.reshape(-1) >= 0, dtype=jnp.int32)
-        return jax.lax.psum(c, axis_name)[None]
+        return blocking.all_reduce_sum(c, axis_name)[None]
 
-    out = jax.jit(jax.shard_map(body, mesh=mesh,
-                                in_specs=(P(axis_name, None),),
-                                out_specs=P(axis_name),
-                                check_vma=False))(src)
+    out = jax.jit(spmd.shard_map(body, mesh=mesh,
+                                 in_specs=(P(axis_name, None),),
+                                 out_specs=P(axis_name),
+                                 check_vma=False))(src)
     return int(out[0])
 
 

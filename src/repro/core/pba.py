@@ -22,8 +22,6 @@ and keyed by (seed, stream, rank).
 from __future__ import annotations
 
 import dataclasses
-import functools
-import math
 from typing import Optional
 
 import jax
@@ -34,6 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import rng as rng_lib
 from repro.core.factions import FactionTable, validate_table
 from repro.core.graph import EdgeList, GenStats
+from repro.runtime import blocking, spmd
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,40 +175,56 @@ def _phase2(rank, recv_counts, cfg: PBAConfig, pair_capacity: int):
     return out_buf, granted
 
 
+def pba_logical_block(ranks, procs_blk, s_blk, cfg: PBAConfig,
+                      num_procs: int, pair_capacity: int,
+                      axis_name: Optional[str], num_devices: int):
+    """Run this device's block of lp logical PBA processors.
+
+    ranks: (lp,) global logical ids; procs_blk: (lp, max_s) faction rows;
+    s_blk: (lp,) faction sizes. The two exchanges route through the shared
+    blocking primitives — (lp, P) counts and (lp, P, C) endpoint buffers
+    under the runtime's blocked-transpose contract. Returns
+    (u (lp, E), v (lp, E), dropped scalar over all procs, granted (lp,)).
+    Host path: axis_name=None with num_devices=1 and lp == P.
+    """
+    a, counts = blocking.map_logical(
+        lambda r, fr, ss: _phase1(r, fr, ss, cfg, num_procs),
+        ranks, procs_blk, s_blk)                          # (lp, E), (lp, P)
+    recv_counts = blocking.transpose_counts(counts, axis_name, num_devices)
+    out_buf, granted = blocking.map_logical(
+        lambda r, rc: _phase2(r, rc, cfg, pair_capacity),
+        ranks, recv_counts)                               # (lp, P, C), (lp,)
+    in_buf = blocking.transpose_payload(out_buf, axis_name, num_devices)
+
+    lp = a.shape[0]
+    occ = jax.vmap(occurrence_rank)(a)
+    v = jnp.take_along_axis(
+        in_buf.reshape(lp, num_procs * pair_capacity),
+        a * pair_capacity + jnp.minimum(occ, pair_capacity - 1), axis=1)
+    v = jnp.where(occ < pair_capacity, v, -1)
+    j = jnp.arange(cfg.edges_per_proc, dtype=jnp.int32)
+    u = (ranks[:, None] * jnp.int32(cfg.vertices_per_proc)
+         + (j // cfg.edges_per_vertex)[None, :])
+    u = jnp.where(v >= 0, u, -1)
+    dropped = blocking.all_reduce_sum(jnp.sum(v < 0, dtype=jnp.int32),
+                                      axis_name)
+    return u, v, dropped, granted
+
+
 def pba_shard_body(rank, faction_row, s, cfg: PBAConfig, num_procs: int,
                    pair_capacity: int, axis_name: Optional[str]):
-    """Per-device PBA program. ``axis_name`` None => single-device (P must be 1)."""
-    e_local = cfg.edges_per_proc
-    a, counts = _phase1(rank, faction_row, s, cfg, num_procs)
+    """Per-device PBA program (one logical proc per device).
 
-    if axis_name is not None:
-        recv_counts = jax.lax.all_to_all(counts, axis_name, split_axis=0,
-                                         concat_axis=0, tiled=True)
-    else:
-        recv_counts = counts
-
-    out_buf, granted = _phase2(rank, recv_counts, cfg, pair_capacity)
-
-    if axis_name is not None:
-        in_buf = jax.lax.all_to_all(out_buf, axis_name, split_axis=0,
-                                    concat_axis=0, tiled=True)
-    else:
-        in_buf = out_buf
-
-    occ = occurrence_rank(a)
-    v = in_buf[a, jnp.minimum(occ, pair_capacity - 1)]
-    v = jnp.where(occ < pair_capacity, v, -1)
-
-    j = jnp.arange(e_local, dtype=jnp.int32)
-    u = rank * jnp.int32(cfg.vertices_per_proc) + j // cfg.edges_per_vertex
-    u = jnp.where(v >= 0, u, -1)
-
-    dropped = jnp.sum(v < 0, dtype=jnp.int32)
-    if axis_name is not None:
-        dropped_total = jax.lax.psum(dropped, axis_name)
-    else:
-        dropped_total = dropped
-    return u, v, dropped_total, granted
+    ``axis_name`` None => single-device (P must be 1). Thin lp=1 wrapper
+    over :func:`pba_logical_block`.
+    """
+    ranks = jnp.reshape(jnp.asarray(rank, jnp.int32), (1,))
+    s_blk = jnp.reshape(jnp.asarray(s, jnp.int32), (1,))
+    num_devices = num_procs if axis_name is not None else 1
+    u, v, dropped, granted = pba_logical_block(
+        ranks, faction_row[None], s_blk, cfg, num_procs, pair_capacity,
+        axis_name, num_devices)
+    return u[0], v[0], dropped, granted[0]
 
 
 def generate_pba(cfg: PBAConfig, table: FactionTable,
@@ -224,12 +239,11 @@ def generate_pba(cfg: PBAConfig, table: FactionTable,
     validate_table(table)
     num_procs = table.num_procs
     if mesh is None:
-        devs = np.array(jax.devices()[:num_procs])
-        if devs.size != num_procs:
+        if len(jax.devices()) < num_procs:
             raise ValueError(
                 f"need {num_procs} devices, have {len(jax.devices())}; "
                 "use generate_pba_host for logical-P-on-1-device")
-        mesh = Mesh(devs, (axis_name,))
+        mesh = spmd.make_proc_mesh(num_procs, axis_name)
     pair_capacity = cfg.pair_capacity or default_pair_capacity(
         cfg.edges_per_proc, int(table.s.min()))
 
@@ -237,14 +251,14 @@ def generate_pba(cfg: PBAConfig, table: FactionTable,
     s = jnp.asarray(table.s)
 
     def body(procs_blk, s_blk):
-        rank = jax.lax.axis_index(axis_name)
-        u, v, dropped, granted = pba_shard_body(
-            rank, procs_blk[0], s_blk[0], cfg, num_procs, pair_capacity,
-            axis_name)
-        return u[None], v[None], dropped[None], granted[None]
+        ranks = blocking.logical_ranks(1, axis_name)
+        u, v, dropped, granted = pba_logical_block(
+            ranks, procs_blk, s_blk, cfg, num_procs, pair_capacity,
+            axis_name, num_procs)
+        return u, v, dropped[None], granted
 
     u, v, dropped, granted = jax.jit(
-        jax.shard_map(
+        spmd.shard_map(
             body, mesh=mesh,
             in_specs=(P(axis_name, None), P(axis_name)),
             out_specs=(P(axis_name, None), P(axis_name, None), P(axis_name),
@@ -277,13 +291,9 @@ def generate_pba_sharded(cfg: PBAConfig, table: FactionTable,
     """
     validate_table(table)
     num_procs = table.num_procs
-    if mesh is None:
-        devs = np.array(jax.devices())
-        mesh = Mesh(devs, (axis_name,))
-    d = int(np.prod(list(mesh.shape.values())))
-    if num_procs % d:
-        raise ValueError(f"logical procs {num_procs} must divide over {d} devices")
-    lp = num_procs // d  # logical procs per device
+    mesh = spmd.ensure_mesh(mesh, axis_name=axis_name)
+    d = spmd.mesh_size(mesh)
+    lp = blocking.split_logical(num_procs, d)  # logical procs per device
     pair_capacity = cfg.pair_capacity or default_pair_capacity(
         cfg.edges_per_proc, int(table.s.min()))
 
@@ -291,44 +301,18 @@ def generate_pba_sharded(cfg: PBAConfig, table: FactionTable,
     s = jnp.asarray(table.s).reshape(d, lp)
 
     def body(procs_blk, s_blk):
-        dev = jax.lax.axis_index(axis_name)
-        ranks = dev * lp + jnp.arange(lp, dtype=jnp.int32)
-        a, counts = jax.vmap(
-            lambda r, fr, ss: _phase1(r, fr, ss, cfg, num_procs)
-        )(ranks, procs_blk[0], s_blk[0])                      # (lp, P)
-        # distributed transpose of the counts matrix: (lp, d, lp) -> rows
-        # for MY logical procs from every sender
-        recv = jax.lax.all_to_all(counts.reshape(lp, d, lp), axis_name,
-                                  split_axis=1, concat_axis=0, tiled=False)
-        # recv: (d, lp, lp): [src_dev, src_lp, my_lp] -> (lp, P) per my proc
-        recv_counts = jnp.moveaxis(recv, 2, 0).reshape(lp, num_procs)
-        out_buf, _ = jax.vmap(
-            lambda r, rc: _phase2(r, rc, cfg, pair_capacity)
-        )(ranks, recv_counts)                                 # (lp, P, C)
-        in_buf = jax.lax.all_to_all(
-            out_buf.reshape(lp, d, lp, pair_capacity), axis_name,
-            split_axis=1, concat_axis=0, tiled=False)         # (d, lp, lp, C)
-        in_buf = jnp.moveaxis(in_buf, 2, 0).reshape(
-            lp, num_procs, pair_capacity)                     # per my proc
-        occ = jax.vmap(occurrence_rank)(a)
-        v = jnp.take_along_axis(
-            in_buf.reshape(lp, num_procs * pair_capacity),
-            a * pair_capacity + jnp.minimum(occ, pair_capacity - 1), axis=1)
-        v = jnp.where(occ < pair_capacity, v, -1)
-        e_local = cfg.edges_per_proc
-        j = jnp.arange(e_local, dtype=jnp.int32)
-        u = (ranks[:, None] * cfg.vertices_per_proc
-             + (j // cfg.edges_per_vertex)[None, :])
-        u = jnp.where(v >= 0, u, -1)
-        dropped = jax.lax.psum(jnp.sum(v < 0, dtype=jnp.int32), axis_name)
+        ranks = blocking.logical_ranks(lp, axis_name)
+        u, v, dropped, _ = pba_logical_block(
+            ranks, procs_blk[0], s_blk[0], cfg, num_procs, pair_capacity,
+            axis_name, d)
         return u[None], v[None], dropped[None]
 
     u, v, dropped = jax.jit(
-        jax.shard_map(body, mesh=mesh,
-                      in_specs=(P(axis_name, None, None), P(axis_name, None)),
-                      out_specs=(P(axis_name, None, None),
-                                 P(axis_name, None, None), P(axis_name)),
-                      check_vma=False)
+        spmd.shard_map(body, mesh=mesh,
+                       in_specs=(P(axis_name, None, None), P(axis_name, None)),
+                       out_specs=(P(axis_name, None, None),
+                                  P(axis_name, None, None), P(axis_name)),
+                       check_vma=False)
     )(procs, s)
 
     n = num_procs * cfg.vertices_per_proc
@@ -357,25 +341,12 @@ def generate_pba_host(cfg: PBAConfig, table: FactionTable) -> tuple[EdgeList, Ge
 
     @jax.jit
     def run(procs, s, ranks):
-        a, counts = jax.vmap(
-            lambda r, fr, ss: _phase1(r, fr, ss, cfg, num_procs)
-        )(ranks, procs, s)
-        recv_counts = counts.T  # exchange 1
-        out_buf, granted = jax.vmap(
-            lambda r, rc: _phase2(r, rc, cfg, pair_capacity)
-        )(ranks, recv_counts)
-        in_buf = jnp.swapaxes(out_buf, 0, 1)  # exchange 2
-        occ = jax.vmap(occurrence_rank)(a)
-        v = jnp.take_along_axis(
-            in_buf.reshape(num_procs, num_procs * pair_capacity),
-            a * pair_capacity + jnp.minimum(occ, pair_capacity - 1), axis=1)
-        v = jnp.where(occ < pair_capacity, v, -1)
-        e_local = cfg.edges_per_proc
-        j = jnp.arange(e_local, dtype=jnp.int32)
-        u = (ranks[:, None] * cfg.vertices_per_proc
-             + (j // cfg.edges_per_vertex)[None, :])
-        u = jnp.where(v >= 0, u, -1)
-        return u, v, jnp.sum(v < 0)
+        # lp == P on one "device": the exchanges degenerate to local
+        # transposes under the same blocked contract as the sharded path.
+        u, v, dropped, _ = pba_logical_block(
+            ranks, procs, s, cfg, num_procs, pair_capacity,
+            axis_name=None, num_devices=1)
+        return u, v, dropped
 
     u, v, dropped = run(procs, s, ranks)
     n = num_procs * cfg.vertices_per_proc

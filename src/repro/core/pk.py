@@ -33,6 +33,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import rng as rng_lib
 from repro.core.graph import EdgeList, GenStats
+from repro.runtime import blocking, spmd
 
 
 @dataclasses.dataclass(frozen=True)
@@ -204,10 +205,8 @@ def generate_pk(seed: SeedGraph, cfg: PKConfig,
     int32 arithmetic. Embarrassingly parallel, exactly load balanced.
     """
     SeedGraph.validate(seed)
-    if mesh is None:
-        devs = np.array(jax.devices())
-        mesh = Mesh(devs, (axis_name,))
-    num_procs = int(np.prod(list(mesh.shape.values())))
+    mesh = spmd.ensure_mesh(mesh, axis_name=axis_name)
+    num_procs = spmd.mesh_size(mesh)
     n, e = pk_sizes(seed, cfg)
     chunk = -(-e // num_procs)  # ceil
     _check_int32(seed, cfg, chunk)
@@ -222,8 +221,6 @@ def generate_pk(seed: SeedGraph, cfg: PKConfig,
     def body(base_blk):
         rank = jax.lax.axis_index(axis_name)
         t = jnp.arange(chunk, dtype=jnp.int32)
-        # mask indices past the global edge count (last device's tail)
-        live = (rank * chunk + t) < e if (chunk * num_procs > e) else None
         if use_kernel:
             from repro.kernels import ops as kops
             u, v = kops.pk_expand(t, base_blk[0], su, sv, seed.num_vertices,
@@ -232,15 +229,15 @@ def generate_pk(seed: SeedGraph, cfg: PKConfig,
         else:
             u, v = expand_chunk(t, base_blk[0], su, sv, seed.num_vertices,
                                 seed.num_edges, cfg.levels, cfg, rank)
-        if live is not None:
-            u = jnp.where(live, u, -1)
-            v = jnp.where(live, v, -1)
+        if chunk * num_procs > e:
+            # mask indices past the global edge count (last device's tail)
+            u, v = blocking.mask_tail((u, v), rank, chunk, e)
         return u[None], v[None]
 
     u, v = jax.jit(
-        jax.shard_map(body, mesh=mesh, in_specs=(P(axis_name, None),),
-                      out_specs=(P(axis_name, None), P(axis_name, None)),
-                      check_vma=False)
+        spmd.shard_map(body, mesh=mesh, in_specs=(P(axis_name, None),),
+                       out_specs=(P(axis_name, None), P(axis_name, None)),
+                       check_vma=False)
     )(jnp.asarray(bases))
 
     edges = EdgeList(src=u, dst=v, num_vertices=n)

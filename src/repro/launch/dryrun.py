@@ -37,6 +37,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import SHAPES, applicable_shapes, get_config, ARCH_IDS
 from repro.launch.hlo_stats import collect_collective_stats, collect_hlo_costs
 from repro.launch.mesh import make_production_mesh
+from repro.runtime import spmd as runtime_spmd
 from repro.models.model import build_model
 from repro.serve.serve_step import (cache_shardings, make_serve_fns,
                                     prefill_input_structs)
@@ -162,7 +163,7 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
 
     compile_s = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = runtime_spmd.cost_analysis(compiled)
     hlo = compiled.as_text()
     costs = collect_hlo_costs(hlo)  # trip-aware (scan bodies x trip count)
     coll = costs.collective

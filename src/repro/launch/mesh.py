@@ -6,19 +6,15 @@ jax import; smoke tests and benches see the real single device.
 """
 from __future__ import annotations
 
-import jax
+from repro.runtime import spmd
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return spmd.make_mesh(shape, axes, axis_types="auto")
 
 
 def make_proc_mesh(num_procs: int = 0, axis_name: str = "proc"):
     """1-D mesh over all (or the first N) devices for the graph generators."""
-    import numpy as np
-    devs = jax.devices() if not num_procs else jax.devices()[:num_procs]
-    return jax.sharding.Mesh(np.array(devs), (axis_name,))
+    return spmd.make_proc_mesh(num_procs, axis_name)

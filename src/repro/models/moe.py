@@ -169,9 +169,10 @@ def _grouped_manual(cfg, p, x, gate_vals, ids_r, pos_r, keep, cap, mesh):
         fn = region2
     else:
         fn = region
-    return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=out_spec, axis_names={"model"},
-                         check_vma=False)(*args)
+    from repro.runtime import spmd
+    return spmd.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_spec, axis_names={"model"},
+                          check_vma=False)(*args)
 
 
 def apply_moe(cfg, p, x):

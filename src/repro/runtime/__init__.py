@@ -1,0 +1,30 @@
+"""Version-portable SPMD runtime layer — the single gateway for all
+distributed execution in this repo.
+
+Submodules:
+  spmd     — shard_map / make_mesh shims over the installed JAX's API
+             (jax.shard_map + check_vma vs jax.experimental.shard_map +
+             check_rep), probed once at import.
+  blocking — logical-processors-over-devices primitives: map_logical,
+             transpose_counts / transpose_payload (the (lp, d, lp)
+             distributed transpose), tail masking, all_reduce_sum.
+
+No module outside ``repro.runtime`` may reference ``jax.shard_map`` or
+``jax.experimental.shard_map`` directly (enforced by tests/test_runtime.py).
+"""
+from repro.runtime import blocking, spmd
+from repro.runtime.blocking import (all_reduce_sum, logical_ranks,
+                                    map_logical, mask_tail, split_logical,
+                                    tail_mask, transpose_counts,
+                                    transpose_payload)
+from repro.runtime.spmd import (api_info, cost_analysis, ensure_mesh,
+                                make_mesh, make_proc_mesh, mesh_size,
+                                shard_map)
+
+__all__ = [
+    "spmd", "blocking",
+    "shard_map", "make_mesh", "make_proc_mesh", "ensure_mesh", "mesh_size",
+    "api_info", "cost_analysis",
+    "map_logical", "logical_ranks", "split_logical", "transpose_counts",
+    "transpose_payload", "tail_mask", "mask_tail", "all_reduce_sum",
+]

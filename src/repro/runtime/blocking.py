@@ -1,0 +1,149 @@
+"""Logical-processors-over-devices blocking primitives.
+
+The paper's algorithms are written for P MPI ranks; production runs P
+*logical* processors over D devices (P = lp * D, lp logical procs per
+device). Every distributed code path in the repo blocks its per-logical-proc
+state the same way, so the machinery lives here once:
+
+  map_logical        vmap a per-rank body over the device's lp-block
+  logical_ranks      the global rank ids owned by this device
+  transpose_counts   distributed transpose of a logically (P, P) matrix
+  transpose_payload  same, with trailing payload dims (P, P, *rest)
+  tail_mask/mask_tail  mask entries past a global total in rank-contiguous
+                     chunks (the last device's ragged tail)
+  all_reduce_sum     psum across the device axis (identity on host)
+
+Blocked-layout contract (shared by every transpose): the global logical
+matrix ``X`` with shape (P, P, *rest) — row q = data *from* logical proc q,
+column r = data *for* logical proc r — is stored device-blocked in rank
+order: device d holds ``X[d*lp:(d+1)*lp]`` as a local (lp, P, *rest) array.
+The transpose returns the same layout of ``X.T`` (swap of the two leading
+logical axes): out[i, q] == X[q, d*lp + i]. Distributed, this is one
+all_to_all of the (lp, d, lp, *rest) re-block — the minimal-communication
+exchange the paper's scalability rests on. On host (``axis_name=None``) the
+device dimension is 1, the full (P, P, *rest) block is local, and the same
+contract degenerates to a plain swapaxes — which is why the sharded and
+host generator paths are bit-identical.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def split_logical(num_procs: int, num_devices: int) -> int:
+    """lp = P / D, validating divisibility (static load balance)."""
+    if num_devices <= 0:
+        raise ValueError(f"num_devices must be positive, got {num_devices}")
+    if num_procs % num_devices:
+        raise ValueError(
+            f"logical procs {num_procs} must divide over {num_devices} "
+            "devices")
+    return num_procs // num_devices
+
+
+def logical_ranks(lp: int, axis_name: Optional[str] = None) -> jax.Array:
+    """Global logical-proc ids owned by this device: (lp,) int32.
+
+    Inside a shard_map body the device index offsets the block; on host
+    (axis_name=None) the single "device" owns ranks [0, lp).
+    """
+    ranks = jnp.arange(lp, dtype=jnp.int32)
+    if axis_name is None:
+        return ranks
+    return jax.lax.axis_index(axis_name) * lp + ranks
+
+
+def map_logical(fn, ranks: jax.Array, *args):
+    """Run a per-logical-proc body over this device's block via vmap.
+
+    fn(rank, *slices) -> pytree of arrays; ``ranks`` is (lp,) and each of
+    ``args`` has leading dim lp. Returns the pytree with a leading lp axis.
+    """
+    return jax.vmap(fn)(ranks, *args)
+
+
+def _transpose_blocked(x: jax.Array, axis_name: Optional[str],
+                       num_devices: int) -> jax.Array:
+    """Core (lp, P, *rest) -> (lp, P, *rest) distributed transpose."""
+    lp, p = int(x.shape[0]), int(x.shape[1])
+    rest = x.shape[2:]
+    if axis_name is None:
+        if num_devices != 1:
+            raise ValueError(
+                "axis_name=None is the single-device path (num_devices=1); "
+                f"got num_devices={num_devices}")
+        if lp != p:
+            raise ValueError(
+                f"single-device transpose needs the full (P, P) block, got "
+                f"({lp}, {p})")
+        return jnp.swapaxes(x, 0, 1)
+    if p != lp * num_devices:
+        raise ValueError(
+            f"blocked shape ({lp}, {p}) inconsistent with "
+            f"{num_devices} devices (expect P = lp * D = {lp * num_devices})")
+    # (lp, d, lp, *rest): [my_lp, dst_dev, dst_lp]; the all_to_all scatters
+    # the dst_dev slabs and concatenates the received src_dev slabs in front.
+    blocked = x.reshape((lp, num_devices, lp) + rest)
+    recv = jax.lax.all_to_all(blocked, axis_name, split_axis=1,
+                              concat_axis=0, tiled=False)
+    # recv: (d, lp, lp, *rest): [src_dev, src_lp, my_lp] — regroup rows per
+    # local logical proc.
+    return jnp.moveaxis(recv, 2, 0).reshape((lp, p) + rest)
+
+
+def transpose_counts(counts: jax.Array, axis_name: Optional[str],
+                     num_devices: int) -> jax.Array:
+    """Transpose a logically (P, P) counts matrix, device-blocked (lp, P).
+
+    counts[i, q] = "my logical proc i sends this many to q"; returns
+    recv[i, q] = "q sends this many to my logical proc i" (exchange 1 of
+    the PBA algorithm).
+    """
+    if counts.ndim != 2:
+        raise ValueError(f"counts must be (lp, P), got {counts.shape}")
+    return _transpose_blocked(counts, axis_name, num_devices)
+
+
+def transpose_payload(buf: jax.Array, axis_name: Optional[str],
+                      num_devices: int) -> jax.Array:
+    """Transpose a logically (P, P, *payload) buffer, blocked (lp, P, *payload).
+
+    buf[i, q, ...] = payload my logical proc i produced for q; returns
+    recv[i, q, ...] = payload q produced for my logical proc i (exchange 2:
+    the fixed-capacity endpoint buffers).
+    """
+    if buf.ndim < 3:
+        raise ValueError(
+            f"payload must be (lp, P, *payload) with >=1 payload dim, got "
+            f"{buf.shape}")
+    return _transpose_blocked(buf, axis_name, num_devices)
+
+
+def tail_mask(rank, chunk: int, total: int) -> jax.Array:
+    """Liveness mask (chunk,) for rank-contiguous ranges over ``total`` items.
+
+    Rank r owns global indices [r*chunk, (r+1)*chunk); entries past
+    ``total`` (the last rank's ragged tail) are False.
+    """
+    j = jnp.arange(chunk, dtype=jnp.int32)
+    return (jnp.asarray(rank, jnp.int32) * chunk + j) < total
+
+
+def mask_tail(arrays, rank, chunk: int, total: int, fill=-1):
+    """Replace tail entries of each (chunk,) array with ``fill``.
+
+    Returns the tuple of masked arrays; static no-op shortcut when the
+    chunking is exact is the caller's choice (the mask is all-True then).
+    """
+    live = tail_mask(rank, chunk, total)
+    return tuple(jnp.where(live, a, fill) for a in arrays)
+
+
+def all_reduce_sum(x, axis_name: Optional[str]):
+    """psum across the device axis; identity on the host path (None)."""
+    if axis_name is None:
+        return x
+    return jax.lax.psum(x, axis_name)

@@ -7,8 +7,13 @@ shard_map DP-sync variant; the implicit-SPMD path reduces full-precision.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.runtime import spmd
 
 
 def quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -47,3 +52,36 @@ def compressed_psum(grads, error, axis_name: str):
     out = [one(g, e) for g, e in zip(flat_g, flat_e)]
     return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
             jax.tree_util.tree_unflatten(treedef, [o[1] for o in out]))
+
+
+def dp_sync(stacked_grads, error=None, mesh: Optional[Mesh] = None,
+            axis_name: str = "data"):
+    """Explicit-SPMD DP gradient sync: EF-int8 mean over a 1-D device mesh.
+
+    stacked_grads: pytree whose leaves carry a leading device axis (D, ...);
+    error: matching EF buffers (or None for zeros). Runs compressed_psum
+    under the runtime shard_map and returns (reduced, new_error) with the
+    reduced mean replicated along the leading axis.
+    """
+    mesh = spmd.ensure_mesh(mesh, axis_name=axis_name)
+    d = spmd.mesh_size(mesh)
+    for leaf in jax.tree_util.tree_leaves(stacked_grads):
+        if leaf.shape[0] != d:
+            raise ValueError(
+                f"stacked grads leading dim {leaf.shape[0]} must equal the "
+                f"mesh device count {d}")
+
+    def body(gs, es):
+        g = jax.tree_util.tree_map(lambda x: x[0], gs)
+        e = jax.tree_util.tree_map(lambda x: x[0], es)
+        red, new_e = compressed_psum(g, e, axis_name)
+        expand = lambda x: x[None]
+        return (jax.tree_util.tree_map(expand, red),
+                jax.tree_util.tree_map(expand, new_e))
+
+    if error is None:
+        error = init_error_buffers(stacked_grads)
+    spec = jax.tree_util.tree_map(lambda _: P(axis_name), stacked_grads)
+    return jax.jit(spmd.shard_map(
+        body, mesh=mesh, in_specs=(spec, spec), out_specs=(spec, spec),
+        check_vma=False))(stacked_grads, error)

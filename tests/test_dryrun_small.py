@@ -44,8 +44,8 @@ def test_collectives_with_loop_multiplier_8dev():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch.hlo_stats import collect_collective_stats, collect_hlo_costs
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.runtime import spmd
+        mesh = spmd.make_mesh((2, 4), ("data", "model"), axis_types="auto")
         def h(x, w):
             def body(c, _):
                 return c @ w, None
@@ -76,11 +76,12 @@ def test_dryrun_cell_on_small_mesh():
         from repro.configs import get_config, SHAPES
         import repro.configs.registry as reg
 
+        from repro.runtime import spmd
+
         def small_mesh(*, multi_pod=False):
             shape = (2, 2, 2) if multi_pod else (2, 4)
             axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-            return jax.make_mesh(shape, axes,
-                                 axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+            return spmd.make_mesh(shape, axes, axis_types="auto")
         dr.make_production_mesh = small_mesh
         dr.TP = 4
 

@@ -1,6 +1,8 @@
 """Elastic scaling / failure handling: partition identity invariants."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.launch.elastic import (partition_range, repartition,

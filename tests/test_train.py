@@ -154,24 +154,18 @@ def test_quantize_roundtrip():
 def test_compressed_psum_matches_mean_8dev():
     run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
-        from jax.sharding import Mesh, PartitionSpec as P
-        from repro.train.compress import compressed_psum, init_error_buffers
-        mesh = Mesh(np.array(jax.devices()), ("d",))
+        from repro.train.compress import dp_sync
         g = {"w": jnp.asarray(np.random.default_rng(0).normal(
             size=(8, 32)).astype(np.float32))}
-        def body(gs):
-            grads = {"w": gs[0]}
-            err = init_error_buffers(grads)
-            red, new_err = compressed_psum(grads, err, "d")
-            return red["w"][None], new_err["w"][None]
-        red, err = jax.jit(jax.shard_map(
-            body, mesh=mesh, in_specs=(P("d", None),),
-            out_specs=(P("d", None), P("d", None)), check_vma=False))(g["w"])
+        red, err = dp_sync(g, axis_name="d")
         true_mean = np.asarray(g["w"]).mean(axis=0)
-        got = np.asarray(red)[0]
+        got = np.asarray(red["w"])[0]
         scale = np.abs(np.asarray(g["w"])).max() / 127.0
         assert np.abs(got - true_mean).max() < 2 * scale
+        # the reduced mean is replicated across the device axis
+        np.testing.assert_array_equal(np.asarray(red["w"]),
+                                      np.tile(got, (8, 1)))
         # error feedback buffers hold the residual
-        assert np.isfinite(np.asarray(err)).all()
+        assert np.isfinite(np.asarray(err["w"])).all()
         print("OK")
     """, 8)

@@ -23,7 +23,8 @@ def test_pk_zero_collectives(procs):
         cfg = PKConfig(levels=5)
         e = seed.num_edges ** 5
         chunk = -(-e // {procs})
-        mesh = Mesh(np.array(jax.devices()[:{procs}]), ("proc",))
+        from repro.runtime import spmd
+        mesh = spmd.make_proc_mesh({procs})
         bases = np.stack([decompose_base(min(p * chunk, e), seed.num_edges, 5)
                           for p in range({procs})]).astype(np.int32)
         su, sv = jnp.asarray(seed.u), jnp.asarray(seed.v)
@@ -32,9 +33,9 @@ def test_pk_zero_collectives(procs):
             u, v = expand_chunk(t, base[0], su, sv, seed.num_vertices,
                                 seed.num_edges, 5, cfg, 0)
             return u[None], v[None]
-        f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=(P("proc", None),),
-                                  out_specs=(P("proc", None), P("proc", None)),
-                                  check_vma=False))
+        f = jax.jit(spmd.shard_map(body, mesh=mesh, in_specs=(P("proc", None),),
+                                   out_specs=(P("proc", None), P("proc", None)),
+                                   check_vma=False))
         hlo = f.lower(jnp.asarray(bases)).compile().as_text()
         colls = re.findall(r"(all-reduce|all-gather|reduce-scatter|"
                            r"all-to-all|collective-permute)", hlo)
@@ -57,13 +58,14 @@ def test_pba_exactly_two_exchanges():
         table = make_factions(procs, FactionSpec(4, 2, 4, seed=1))
         cfg = PBAConfig(vertices_per_proc=200, edges_per_vertex=3, seed=7,
                         pair_capacity=256)
-        mesh = Mesh(np.array(jax.devices()), ("proc",))
+        from repro.runtime import spmd
+        mesh = spmd.make_proc_mesh()
         def body(procs_blk, s_blk):
             rank = jax.lax.axis_index("proc")
             u, v, dropped, granted = pba_shard_body(
                 rank, procs_blk[0], s_blk[0], cfg, procs, 256, "proc")
             return u[None], v[None]
-        f = jax.jit(jax.shard_map(
+        f = jax.jit(spmd.shard_map(
             body, mesh=mesh,
             in_specs=(P("proc", None), P("proc")),
             out_specs=(P("proc", None), P("proc", None)), check_vma=False))

@@ -1,10 +1,15 @@
-"""Shared benchmark utilities: timing + CSV row emission."""
+"""Shared benchmark utilities: timing, CSV row emission, and compiled-cost
+introspection routed through ``repro.runtime`` (the version-portable
+cost_analysis shim) so benchmark numbers and the CI collective-bytes gate
+read XLA's analysis the same way on every JAX version."""
 from __future__ import annotations
 
 import time
 from typing import Callable
 
 import jax
+
+from repro.runtime import spmd
 
 
 def time_jax(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -24,3 +29,17 @@ def emit(name: str, us_per_call: float, derived: str) -> str:
     row = f"{name},{us_per_call:.1f},{derived}"
     print(row, flush=True)
     return row
+
+
+def compiled_cost(fn: Callable, *args) -> dict:
+    """Compile ``fn(*args)`` and return its normalized XLA cost analysis.
+
+    Goes through ``repro.runtime.spmd.cost_analysis`` so the dict-vs-list
+    API drift is handled once; {} when the backend offers no analysis.
+    """
+    return spmd.cost_analysis(jax.jit(fn).lower(*args).compile())
+
+
+def bytes_accessed(fn: Callable, *args) -> float:
+    """Total 'bytes accessed' of the compiled program (0.0 if unavailable)."""
+    return float(compiled_cost(fn, *args).get("bytes accessed", 0.0))

@@ -1,0 +1,72 @@
+"""Multi-round streaming exchange: rounds × capacity sweep.
+
+Measures the cost of trading exchange-buffer memory for rounds on the
+adversarial hub layout (the per-pair worst case for a fixed capacity):
+
+  * legacy single-shot exchange at capacity C — fast, but drops the hub tail;
+  * streaming at R in {1, 2, 4, 8}: per-round buffer C_r = ceil(C / R),
+    rounds repeat until the residual is zero — zero drops at 1/R the peak
+    exchange memory, paying rounds_run transposes.
+
+Derived columns: drops, rounds actually run, C_r, the peak per-proc exchange
+buffer in bytes (P * C_r * 4), and the compiled program's total bytes
+accessed via the runtime cost_analysis shim.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import bytes_accessed, emit, time_jax
+from repro.core import PBAConfig, generate_pba_host, hub_factions
+from repro.runtime import streaming
+
+import jax.numpy as jnp
+
+
+def _compiled_bytes(cfg: PBAConfig, table) -> float:
+    """Bytes accessed of the full host-mode PBA program (runtime-routed)."""
+    from repro.core.pba import default_pair_capacity, pba_logical_block
+
+    num_procs = table.num_procs
+    pair_capacity = cfg.pair_capacity or default_pair_capacity(
+        cfg.edges_per_proc, int(table.s.min()))
+
+    def run(procs, s, ranks):
+        u, v, dropped, _, rounds = pba_logical_block(
+            ranks, procs, s, cfg, num_procs, pair_capacity,
+            axis_name=None, num_devices=1)
+        return u, v, dropped, rounds
+
+    return bytes_accessed(run, jnp.asarray(table.procs),
+                          jnp.asarray(table.s),
+                          jnp.arange(num_procs, dtype=jnp.int32))
+
+
+def run() -> list[str]:
+    rows = []
+    p, vpp, k, cap = 8, 2000, 4, 256
+    table = hub_factions(p)
+    for rounds in (None, 1, 2, 4, 8):
+        cfg = PBAConfig(vertices_per_proc=vpp, edges_per_vertex=k, seed=7,
+                        pair_capacity=cap, exchange_rounds=rounds,
+                        total_capacity_factor=8)
+        edges, stats = generate_pba_host(cfg, table)  # warm + stats
+
+        def gen(cfg=cfg):
+            e, _ = generate_pba_host(cfg, table)
+            return e.src
+
+        t = time_jax(gen, warmup=1, iters=3)
+        c_r = cap if rounds is None else streaming.round_capacity(cap, rounds)
+        name = "single_shot" if rounds is None else f"stream_r{rounds}"
+        rows.append(emit(
+            f"stream_exchange_{name}", t * 1e6,
+            f"drops={stats.dropped_edges};rounds_run={stats.exchange_rounds};"
+            f"c_r={c_r};peak_buf_bytes={p * c_r * 4};"
+            f"bytes_accessed={_compiled_bytes(cfg, table):.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

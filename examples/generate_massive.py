@@ -6,9 +6,12 @@ Run with N host devices to exercise the real shard_map collectives:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/generate_massive.py --procs 8
 
-Demonstrates: distributed PBA + PK, on-device degree histogram (Pallas
-kernel path on TPU), generation-state checkpointing (seed + partition is the
-whole state — regeneration beats storage at >100M edges/s), and restart.
+Demonstrates: distributed PBA + PK, the multi-round streaming exchange
+(--exchange-rounds: zero dropped edges with a 1/R-size exchange buffer),
+out-of-core generation straight to resumable shards (--out-dir: the graph
+only has to fit on disk), on-device degree histogram (Pallas kernel path on
+TPU), generation-state checkpointing (seed + partition is the whole state —
+regeneration beats storage at >100M edges/s), and restart.
 """
 from __future__ import annotations
 
@@ -21,9 +24,10 @@ import numpy as np
 
 import jax
 
-from repro.core import (FactionSpec, PBAConfig, PKConfig, degree_counts,
-                        fit_power_law, generate_pba, generate_pba_sharded,
-                        generate_pk, make_factions, star_clique_seed)
+from repro.core import (FactionSpec, PBAConfig, PKConfig, PBAStream,
+                        PKStream, degree_counts, fit_power_law, generate_pba,
+                        generate_pba_sharded, generate_pk, make_factions,
+                        star_clique_seed, stream_to_shards)
 
 
 def main() -> None:
@@ -33,7 +37,19 @@ def main() -> None:
                          "(paper: 1000 ranks) as long as it divides evenly")
     ap.add_argument("--vertices-per-proc", type=int, default=100_000)
     ap.add_argument("--edges-per-vertex", type=int, default=5)
+    ap.add_argument("--pair-capacity", type=int, default=None,
+                    help="per-(sender,receiver) exchange budget C; default "
+                         "heuristic from faction sizes")
+    ap.add_argument("--exchange-rounds", type=int, default=None,
+                    help="stream exchange 2 over R rounds of capacity "
+                         "ceil(C/R) — zero dropped edges, 1/R exchange "
+                         "memory; default: legacy single-shot exchange")
     ap.add_argument("--pk-levels", type=int, default=4)
+    ap.add_argument("--out-dir", default=None,
+                    help="out-of-core mode: stream per-round PBA blocks and "
+                         "per-slab PK blocks to resumable shards here "
+                         "instead of materializing edge lists")
+    ap.add_argument("--pk-slab-edges", type=int, default=1 << 20)
     ap.add_argument("--ckpt", default="/tmp/repro_gen_ckpt.json")
     args = ap.parse_args()
     n_dev = len(jax.devices())
@@ -49,6 +65,19 @@ def main() -> None:
         with open(args.ckpt) as f:
             state = json.load(f)
         print(f"restarted from {args.ckpt}: {state}")
+        # The checkpointed logical-proc count defines the graph; it cannot
+        # be re-derived without generating a *different* graph, so restarts
+        # on hardware that cannot host it must fail loudly, not crash deep
+        # inside split_logical. Out-of-core mode is exempt: the stream
+        # driver runs the host path, which handles any logical-proc count.
+        if state["procs"] % n_dev and not args.out_dir:
+            raise SystemExit(
+                f"checkpoint {args.ckpt} was written for "
+                f"{state['procs']} logical processors, which does not "
+                f"divide over the {n_dev} devices present. Restart on a "
+                f"device count that divides {state['procs']}, delete the "
+                "checkpoint to start a new generation, or resume "
+                "out-of-core with --out-dir.")
     else:
         with open(args.ckpt, "w") as f:
             json.dump(state, f)
@@ -58,15 +87,47 @@ def main() -> None:
                                          min(max(p // 2, 2), p), seed=1))
     cfg = PBAConfig(vertices_per_proc=state["vpp"],
                     edges_per_vertex=state["k"],
-                    interfaction_prob=0.05, seed=state["seed"])
+                    interfaction_prob=0.05,
+                    pair_capacity=args.pair_capacity,
+                    exchange_rounds=args.exchange_rounds,
+                    seed=state["seed"])
+
+    if args.out_dir:
+        # Out-of-core: generator blocks go straight to resumable shards;
+        # a preempted run re-executes only the missing blocks.
+        pba_dir = os.path.join(args.out_dir, "pba")
+        t0 = time.perf_counter()
+        stream = PBAStream(cfg, table)
+        _, stats = stream_to_shards(stream, pba_dir)
+        t = time.perf_counter() - t0
+        print(f"PBA: {stats.emitted_edges:,} edges -> {pba_dir} in {t:.2f}s "
+              f"({stats.emitted_edges / t:.3e} edges/s) "
+              f"rounds={stats.exchange_rounds} drops={stats.dropped_edges}")
+
+        pk_dir = os.path.join(args.out_dir, "pk")
+        t0 = time.perf_counter()
+        pk_stream = PKStream(star_clique_seed(5),
+                             PKConfig(levels=args.pk_levels, noise=0.05,
+                                      seed=3),
+                             slab_edges=args.pk_slab_edges)
+        _, pk_stats = stream_to_shards(pk_stream, pk_dir)
+        t = time.perf_counter() - t0
+        print(f"PK:  {pk_stats.emitted_edges:,} edges -> {pk_dir} in "
+              f"{t:.2f}s ({pk_stats.emitted_edges / t:.3e} edges/s, "
+              f"{pk_stream.num_blocks} slabs, zero communication)")
+        return
+
     t0 = time.perf_counter()
     gen = generate_pba if state["procs"] == n_dev else generate_pba_sharded
     edges, stats = gen(cfg, table)
     jax.block_until_ready(edges.src)
     t = time.perf_counter() - t0
+    rounds = (f" rounds={stats.exchange_rounds}"
+              if args.exchange_rounds else "")
     print(f"PBA: {stats.emitted_edges:,} edges, {state['procs']} logical "
           f"procs on {n_dev} devices in {t:.2f}s "
-          f"({stats.emitted_edges / t:.3e} edges/s) drops={stats.dropped_edges}")
+          f"({stats.emitted_edges / t:.3e} edges/s) "
+          f"drops={stats.dropped_edges}{rounds}")
 
     deg = np.asarray(degree_counts(edges))
     fit = fit_power_law(deg, kmin=5)

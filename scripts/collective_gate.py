@@ -1,0 +1,116 @@
+"""Collective-bytes regression gate (ROADMAP open item).
+
+Compiles the real sharded PBA exchange program on the forced-host-device
+mesh and reads its total 'bytes accessed' through the version-portable
+``repro.runtime.spmd.cost_analysis`` shim. Two mechanical checks:
+
+  1. Capacity scaling: shrinking ``pair_capacity`` 4x must shrink the
+     compiled program's bytes accessed — if the exchange buffers ever stop
+     depending on the capacity knob (e.g. an accidental full-size
+     materialization sneaks in), this inequality breaks immediately and
+     version-independently.
+  2. Baseline drift: bytes accessed at the reference config must stay
+     within TOLERANCE of scripts/collective_bytes_baseline.json (committed —
+     results/ is gitignored, and a baseline that vanishes on every fresh
+     clone would make this half of the gate vacuous). A missing baseline is
+     (re)written and reported, so the gate bootstraps itself; delete the
+     file to re-baseline after an intentional exchange change.
+
+Exits 0 with a notice when the backend offers no cost analysis.
+
+Usage (see scripts/verify.sh):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python scripts/collective_gate.py
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import FactionSpec, PBAConfig, make_factions
+from repro.core.pba import pba_logical_block
+from repro.runtime import blocking, spmd
+
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "collective_bytes_baseline.json")
+TOLERANCE = 0.25  # fractional drift allowed before the gate trips
+
+
+def compiled_bytes(cfg: PBAConfig, table, pair_capacity: int,
+                   axis_name: str = "proc") -> float:
+    num_procs = table.num_procs
+    mesh = spmd.make_proc_mesh(num_procs, axis_name)
+
+    def body(procs_blk, s_blk):
+        ranks = blocking.logical_ranks(1, axis_name)
+        u, v, dropped, granted, rounds = pba_logical_block(
+            ranks, procs_blk, s_blk, cfg, num_procs, pair_capacity,
+            axis_name, num_procs)
+        return u, v, dropped[None], rounds[None]
+
+    fn = jax.jit(spmd.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis_name, None), P(axis_name)),
+        out_specs=(P(axis_name, None), P(axis_name, None), P(axis_name),
+                   P(axis_name)),
+        check_vma=False))
+    compiled = fn.lower(jnp.asarray(table.procs),
+                        jnp.asarray(table.s)).compile()
+    return float(spmd.cost_analysis(compiled).get("bytes accessed", 0.0))
+
+
+def main() -> int:
+    n_dev = len(jax.devices())
+    table = make_factions(n_dev, FactionSpec(max(n_dev // 2, 1), 2,
+                                             max(n_dev // 2, 2), seed=1))
+    cfg = PBAConfig(vertices_per_proc=200, edges_per_vertex=3, seed=7)
+
+    big = compiled_bytes(cfg, table, pair_capacity=256)
+    small = compiled_bytes(cfg, table, pair_capacity=64)
+    if big == 0.0:
+        print("collective gate: backend offers no cost analysis — skipped")
+        return 0
+    print(f"collective gate: bytes accessed C=256 -> {big:.0f}, "
+          f"C=64 -> {small:.0f}")
+    if small >= big:
+        print("collective gate FAILED: exchange bytes do not scale with "
+              f"pair_capacity (C=64: {small:.0f} >= C=256: {big:.0f}) — "
+              "a full-size buffer is being materialized somewhere",
+              file=sys.stderr)
+        return 1
+
+    record = {"config": {"devices": n_dev, "vertices_per_proc": 200,
+                         "edges_per_vertex": 3, "pair_capacity": 256},
+              "bytes_accessed": big,
+              "jax_version": jax.__version__}
+    if not os.path.exists(BASELINE):
+        os.makedirs(os.path.dirname(BASELINE), exist_ok=True)
+        with open(BASELINE, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"collective gate: wrote new baseline {BASELINE} "
+              f"({big:.0f} bytes)")
+        return 0
+
+    with open(BASELINE) as f:
+        base = json.load(f)
+    limit = base["bytes_accessed"] * (1 + TOLERANCE)
+    if big > limit:
+        print(f"collective gate FAILED: bytes accessed {big:.0f} exceeds "
+              f"baseline {base['bytes_accessed']:.0f} "
+              f"(+{TOLERANCE:.0%} limit {limit:.0f}; baseline jax "
+              f"{base.get('jax_version')}). If the exchange-volume increase "
+              f"is intentional, delete {BASELINE} to re-baseline.",
+              file=sys.stderr)
+        return 1
+    print(f"collective gate OK: {big:.0f} <= {limit:.0f} "
+          f"(baseline {base['bytes_accessed']:.0f} +{TOLERANCE:.0%})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,10 +1,12 @@
 #!/usr/bin/env bash
-# Tier-1 verify + 8-host-device smoke.
+# Tier-1 verify + 8-host-device smoke + collective-bytes gate.
 #
 # Catches environment drift mechanically: the probe prints which shard_map
 # API the runtime layer resolved, the test run covers the single-device
-# suite, and the smoke pass exercises the real distributed paths (shard_map
-# collectives, blocked transposes, tail masking) on 8 forced host devices.
+# suite, the smoke pass exercises the real distributed paths (shard_map
+# collectives, blocked/streamed transposes, tail masking) on 8 forced host
+# devices, and the collective gate fails on exchange-volume regressions
+# (scripts/collective_gate.py, via runtime.spmd.cost_analysis).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -44,6 +46,15 @@ e_h, st_h = generate_pba_host(cfg, table)
 np.testing.assert_array_equal(np.asarray(e_d.src), np.asarray(e_h.src))
 np.testing.assert_array_equal(np.asarray(e_d.dst), np.asarray(e_h.dst))
 
+# multi-round streaming exchange: same parity contract, zero drops
+import dataclasses
+cfg_s = dataclasses.replace(cfg, pair_capacity=8, exchange_rounds=4)
+e_ds, st_ds = generate_pba(cfg_s, table)
+e_hs, st_hs = generate_pba_host(cfg_s, table)
+np.testing.assert_array_equal(np.asarray(e_ds.src), np.asarray(e_hs.src))
+np.testing.assert_array_equal(np.asarray(e_ds.dst), np.asarray(e_hs.dst))
+assert st_ds.exchange_rounds == st_hs.exchange_rounds > 1, (st_ds, st_hs)
+
 pk_edges, pk_st = generate_pk(star_clique_seed(4), PKConfig(levels=5))
 assert pk_st.emitted_edges == pk_st.requested_edges, pk_st
 
@@ -52,4 +63,9 @@ deg = degree_counts_sharded(e_d)
 assert int(deg.sum()) == 2 * st_d.emitted_edges
 print("8-device smoke OK")
 PY
+
+echo "== collective-bytes gate =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python scripts/collective_gate.py
+
 echo "verify OK"

@@ -4,17 +4,20 @@ Public API:
   PBA (parallel Barabási–Albert): PBAConfig, generate_pba, generate_pba_host
   PK (parallel Kronecker): PKConfig, SeedGraph, generate_pk, generate_pk_host
   Factions: FactionSpec, FactionTable, make_factions, block_factions
+  Out-of-core streaming: PBAStream, PKStream, stream_to_shards
   Containers: EdgeList, GenStats
   Analysis: fit_power_law, sampled_path_stats, community_contrast, ...
 """
 from repro.core.graph import EdgeList, GenStats, degree_counts, to_csr
 from repro.core.factions import (FactionSpec, FactionTable, make_factions,
-                                 block_factions)
+                                 block_factions, hub_factions)
 from repro.core.pba import (PBAConfig, generate_pba, generate_pba_host,
                             generate_pba_sharded, serial_ba_reference)
 from repro.core.pk import (PKConfig, SeedGraph, generate_pk, generate_pk_host,
                            star_clique_seed, dense_power_seed,
                            dense_kronecker_power, pk_sizes, xor_randomize)
+from repro.core.stream import (EdgeBlock, PBAStream, PKStream,
+                               stream_to_shards)
 from repro.core.analysis import (fit_power_law, sampled_path_stats,
                                  community_contrast, block_density,
                                  self_similarity_score,
@@ -24,11 +27,13 @@ from repro.core.analysis import (fit_power_law, sampled_path_stats,
 __all__ = [
     "EdgeList", "GenStats", "degree_counts", "to_csr",
     "FactionSpec", "FactionTable", "make_factions", "block_factions",
+    "hub_factions",
     "PBAConfig", "generate_pba", "generate_pba_host", "generate_pba_sharded",
     "serial_ba_reference",
     "PKConfig", "SeedGraph", "generate_pk", "generate_pk_host",
     "star_clique_seed", "dense_power_seed", "dense_kronecker_power",
     "pk_sizes", "xor_randomize",
+    "EdgeBlock", "PBAStream", "PKStream", "stream_to_shards",
     "fit_power_law", "sampled_path_stats", "community_contrast",
     "block_density", "self_similarity_score",
     "sampled_clustering_coefficient", "degree_histogram",

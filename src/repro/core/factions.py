@@ -57,6 +57,18 @@ class FactionTable:
         return self.procs.shape[1]
 
 
+def _table_from_rows(rows: Sequence[np.ndarray],
+                     factions: Sequence) -> FactionTable:
+    """Assemble the dense padded FactionTable from per-processor rows."""
+    s = np.array([len(r) for r in rows], np.int32)
+    procs = np.full((len(rows), int(s.max())), -1, np.int32)
+    for p, row in enumerate(rows):
+        procs[p, : len(row)] = row
+    return FactionTable(procs=procs, s=s,
+                        factions=tuple(tuple(int(x) for x in f)
+                                       for f in factions))
+
+
 def make_factions(num_procs: int, spec: FactionSpec) -> FactionTable:
     """Draw random factions and build the per-processor tables.
 
@@ -86,17 +98,9 @@ def make_factions(num_procs: int, spec: FactionSpec) -> FactionTable:
             factions[fi] = np.sort(np.append(factions[fi], p))
             member_of[p].append(fi)
 
-    rows = []
-    for p in range(num_procs):
-        row = np.concatenate([factions[fi] for fi in member_of[p]])
-        rows.append(row.astype(np.int32))
-    s = np.array([len(r) for r in rows], np.int32)
-    max_s = int(s.max())
-    procs = np.full((num_procs, max_s), -1, np.int32)
-    for p, row in enumerate(rows):
-        procs[p, : len(row)] = row
-    return FactionTable(procs=procs, s=s,
-                        factions=tuple(tuple(int(x) for x in f) for f in factions))
+    rows = [np.concatenate([factions[fi] for fi in member_of[p]]).astype(np.int32)
+            for p in range(num_procs)]
+    return _table_from_rows(rows, factions)
 
 
 def block_factions(num_procs: int, block_size: int) -> FactionTable:
@@ -109,12 +113,29 @@ def block_factions(num_procs: int, block_size: int) -> FactionTable:
         raise ValueError("block_size must divide num_procs")
     factions = [tuple(range(i, i + block_size))
                 for i in range(0, num_procs, block_size)]
-    procs = np.full((num_procs, block_size), -1, np.int32)
-    s = np.full((num_procs,), block_size, np.int32)
-    for p in range(num_procs):
-        blk = p // block_size
-        procs[p] = np.arange(blk * block_size, (blk + 1) * block_size, dtype=np.int32)
-    return FactionTable(procs=procs, s=s, factions=tuple(factions))
+    rows = [np.arange((p // block_size) * block_size,
+                      (p // block_size + 1) * block_size, dtype=np.int32)
+            for p in range(num_procs)]
+    return _table_from_rows(rows, factions)
+
+
+def hub_factions(num_procs: int) -> FactionTable:
+    """Adversarial hub layout: processor 0 shares a faction with everyone.
+
+    Factions {0, p} for every p > 0, so every urn is seeded half with
+    processor 0 — per-pair load onto the hub concentrates like E instead of
+    E/P, the worst case for a fixed per-pair exchange capacity. This is the
+    stress table for the multi-round streaming exchange (and the layout
+    family that silently clipped the hub tail under the single-shot
+    exchange).
+    """
+    if num_procs < 2:
+        raise ValueError("hub layout needs at least 2 processors")
+    factions = [(0, p) for p in range(1, num_procs)]
+    rows = [np.concatenate([np.array(f, np.int32)
+                            for f in factions if p in f])
+            for p in range(num_procs)]
+    return _table_from_rows(rows, factions)
 
 
 def validate_table(table: FactionTable) -> None:

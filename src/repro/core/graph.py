@@ -52,12 +52,17 @@ class EdgeList:
 
 @dataclasses.dataclass
 class GenStats:
-    """Bookkeeping returned alongside a generated graph."""
+    """Bookkeeping returned alongside a generated graph.
+
+    exchange_rounds: how many rounds the endpoint exchange actually ran
+    (1 for the legacy single-shot exchange and for PK, which has none).
+    """
 
     requested_edges: int
     emitted_edges: int
     dropped_edges: int
     num_vertices: int
+    exchange_rounds: int = 1
 
     @property
     def drop_fraction(self) -> float:

@@ -32,7 +32,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import rng as rng_lib
 from repro.core.factions import FactionTable, validate_table
 from repro.core.graph import EdgeList, GenStats
-from repro.runtime import blocking, spmd
+from repro.runtime import blocking, spmd, streaming
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +46,13 @@ class PBAConfig:
       inter-faction edges).
     pair_capacity: static per-(sender, receiver) endpoint budget C. None ->
       heuristic from faction sizes.
+    exchange_rounds: None -> legacy single fixed-capacity exchange 2 (pairs
+      needing more than C endpoints overflow into counted drops). R >= 1 ->
+      multi-round streaming exchange: per-round buffer C_r = ceil(C / R),
+      rounds repeat (beyond R if demand requires, bounded by ceil(E / C_r))
+      until every pair's residual is zero — dropped_edges from pair
+      overflow is exactly 0 for any faction layout, and peak exchange
+      memory shrinks from P*C to P*C_r.
     total_capacity_factor: phase-2 urn budget as a multiple of E_local.
     seed: global RNG seed.
     """
@@ -54,6 +61,7 @@ class PBAConfig:
     edges_per_vertex: int
     interfaction_prob: float = 0.05
     pair_capacity: Optional[int] = None
+    exchange_rounds: Optional[int] = None
     # §Perf G1: phase-2 urn budget. Expected requests == E_local; 2x headroom
     # keeps drops at zero for non-adversarial faction layouts while cutting
     # the dominant resolve cost ~40% (was 4x — see EXPERIMENTS.md §Perf-Gen).
@@ -141,15 +149,21 @@ def _phase1(rank, faction_row, s, cfg: PBAConfig, num_procs: int):
     return a, counts
 
 
-def _phase2(rank, recv_counts, cfg: PBAConfig, pair_capacity: int):
-    """Generate requested endpoints by local preferential attachment.
+def _phase2_pool(rank, cfg: PBAConfig, t_cap: Optional[int] = None) -> jax.Array:
+    """Resolve the phase-2 urn once: slot -> *global* vertex id pool.
 
-    Returns out_buf (P, C) of *global* vertex ids; -1 marks unused slots.
+    The pool depends only on (seed, rank, t_cap) — not on the demand — so
+    the single-shot and streaming grant paths draw identical endpoints for
+    the same slot index *at the same budget*. Note the budget is part of
+    the draw: ``jax.random.bits`` blocks over the whole array, so pools
+    drawn at different ``t_cap`` disagree even on shared slots (the stream
+    driver's auto-capacity mode therefore defines its own deterministic
+    graph rather than extending this one).
     """
     e_local = cfg.edges_per_proc
     k = cfg.edges_per_vertex
-    num_procs = recv_counts.shape[0]
-    t_cap = cfg.total_capacity_factor * e_local
+    if t_cap is None:
+        t_cap = cfg.total_capacity_factor * e_local
     pool_n = e_local + t_cap
 
     # Urn over endpoint slots: first E slots are the k out-edges of each local
@@ -162,7 +176,19 @@ def _phase2(rank, recv_counts, cfg: PBAConfig, pair_capacity: int):
     ptr = jnp.where(terminal, jj, r)
     ptr = resolve_pointers(ptr, terminal)
     local_vertex = (ptr // k).astype(jnp.int32)  # slot -> owning local vertex
-    pool = rank * jnp.int32(cfg.vertices_per_proc) + local_vertex  # global ids
+    return rank * jnp.int32(cfg.vertices_per_proc) + local_vertex  # global ids
+
+
+def _phase2(rank, recv_counts, cfg: PBAConfig, pair_capacity: int):
+    """Generate requested endpoints by local preferential attachment.
+
+    Legacy single-shot grant: per-pair demand is clipped to ``pair_capacity``
+    up front. Returns out_buf (P, C) of *global* vertex ids; -1 marks unused
+    slots.
+    """
+    e_local = cfg.edges_per_proc
+    t_cap = cfg.total_capacity_factor * e_local
+    pool = _phase2_pool(rank, cfg)
 
     cc = jnp.minimum(recv_counts, pair_capacity)
     offsets = jnp.cumsum(cc) - cc  # exclusive prefix
@@ -175,6 +201,24 @@ def _phase2(rank, recv_counts, cfg: PBAConfig, pair_capacity: int):
     return out_buf, granted
 
 
+def _grant_round(pool, recv_counts, r, round_cap: int, e_local: int,
+                 t_cap: int):
+    """Round ``r`` of the streamed grant: ranks [r*C_r, (r+1)*C_r) per pair.
+
+    Offsets come from the *unclipped* demand, so a pair's endpoints occupy
+    one contiguous pool run across rounds and every request rank maps to a
+    unique slot. Slots past the urn budget ``t_cap`` emit -1 (counted as
+    drops by the requester).
+    """
+    offsets = jnp.cumsum(recv_counts) - recv_counts  # exclusive prefix
+    window = streaming.round_window(recv_counts, r, round_cap)
+    c_idx = jnp.arange(round_cap, dtype=jnp.int32)
+    flat_idx = offsets[:, None] + r * round_cap + c_idx[None, :]
+    valid = (c_idx[None, :] < window[:, None]) & (flat_idx < t_cap)
+    vals = pool[e_local + jnp.clip(flat_idx, 0, t_cap - 1)]
+    return jnp.where(valid, vals, -1)
+
+
 def pba_logical_block(ranks, procs_blk, s_blk, cfg: PBAConfig,
                       num_procs: int, pair_capacity: int,
                       axis_name: Optional[str], num_devices: int):
@@ -182,33 +226,96 @@ def pba_logical_block(ranks, procs_blk, s_blk, cfg: PBAConfig,
 
     ranks: (lp,) global logical ids; procs_blk: (lp, max_s) faction rows;
     s_blk: (lp,) faction sizes. The two exchanges route through the shared
-    blocking primitives — (lp, P) counts and (lp, P, C) endpoint buffers
-    under the runtime's blocked-transpose contract. Returns
-    (u (lp, E), v (lp, E), dropped scalar over all procs, granted (lp,)).
+    blocking/streaming primitives — (lp, P) counts and (lp, P, C) or
+    per-round (lp, P, C_r) endpoint buffers under the runtime's
+    blocked-transpose contract. Returns (u (lp, E), v (lp, E), dropped
+    scalar over all procs, granted (lp,), rounds scalar).
     Host path: axis_name=None with num_devices=1 and lp == P.
     """
     a, counts = blocking.map_logical(
         lambda r, fr, ss: _phase1(r, fr, ss, cfg, num_procs),
         ranks, procs_blk, s_blk)                          # (lp, E), (lp, P)
     recv_counts = blocking.transpose_counts(counts, axis_name, num_devices)
-    out_buf, granted = blocking.map_logical(
-        lambda r, rc: _phase2(r, rc, cfg, pair_capacity),
-        ranks, recv_counts)                               # (lp, P, C), (lp,)
-    in_buf = blocking.transpose_payload(out_buf, axis_name, num_devices)
-
     lp = a.shape[0]
     occ = jax.vmap(occurrence_rank)(a)
-    v = jnp.take_along_axis(
-        in_buf.reshape(lp, num_procs * pair_capacity),
-        a * pair_capacity + jnp.minimum(occ, pair_capacity - 1), axis=1)
-    v = jnp.where(occ < pair_capacity, v, -1)
+
+    if cfg.exchange_rounds is None:
+        # Legacy single fixed-capacity exchange: per-pair overflow (occ >= C)
+        # is dropped and counted.
+        out_buf, granted = blocking.map_logical(
+            lambda r, rc: _phase2(r, rc, cfg, pair_capacity),
+            ranks, recv_counts)                           # (lp, P, C), (lp,)
+        in_buf = blocking.transpose_payload(out_buf, axis_name, num_devices)
+        v = jnp.take_along_axis(
+            in_buf.reshape(lp, num_procs * pair_capacity),
+            a * pair_capacity + jnp.minimum(occ, pair_capacity - 1), axis=1)
+        v = jnp.where(occ < pair_capacity, v, -1)
+        rounds = jnp.int32(1)
+    else:
+        v, granted, rounds = _streamed_exchange2(
+            a, occ, counts, recv_counts, ranks, cfg, pair_capacity,
+            num_procs, axis_name, num_devices)
+
     j = jnp.arange(cfg.edges_per_proc, dtype=jnp.int32)
     u = (ranks[:, None] * jnp.int32(cfg.vertices_per_proc)
          + (j // cfg.edges_per_vertex)[None, :])
     u = jnp.where(v >= 0, u, -1)
     dropped = blocking.all_reduce_sum(jnp.sum(v < 0, dtype=jnp.int32),
                                       axis_name)
-    return u, v, dropped, granted
+    return u, v, dropped, granted, rounds
+
+
+def _streamed_exchange2(a, occ, counts, recv_counts, ranks, cfg: PBAConfig,
+                        pair_capacity: int, num_procs: int,
+                        axis_name: Optional[str], num_devices: int):
+    """Exchange 2 as a multi-round stream (see runtime/streaming.py).
+
+    Round r serves request ranks [r*C_r, (r+1)*C_r) of every (sender,
+    receiver) pair; the requester scatters the received band into its edge
+    list by occurrence rank. Rounds repeat until the globally all-reduced
+    residual is zero (statically bounded by ceil(E / C_r), the worst legal
+    pair count), so no edge is ever dropped for pair-capacity reasons —
+    only urn-budget exhaustion (t_cap) can still emit -1.
+    """
+    lp = a.shape[0]
+    e_local = cfg.edges_per_proc
+    t_cap = cfg.total_capacity_factor * e_local
+    c_r = streaming.round_capacity(pair_capacity, cfg.exchange_rounds)
+    max_rounds = streaming.rounds_needed(e_local, c_r)
+    pool = blocking.map_logical(lambda r: _phase2_pool(r, cfg), ranks)
+
+    # Drive termination by what the urn can actually grant, not raw demand:
+    # once a provider's budget is exhausted every further slot is -1, and
+    # requesters past the budget already hold -1 (the init value) — rounds
+    # transposing pure padding would be wasted collectives.
+    offsets = jnp.cumsum(recv_counts, axis=1) - recv_counts
+    grantable = jnp.clip(jnp.minimum(recv_counts, t_cap - offsets), 0, None)
+
+    def emit(r):
+        return jax.vmap(
+            lambda p, rc: _grant_round(p, rc, r, c_r, e_local, t_cap)
+        )(pool, recv_counts)                              # (lp, P, C_r)
+
+    def consume(r, recv, v):
+        band = (occ >= r * c_r) & (occ < (r + 1) * c_r)
+        idx = a * c_r + jnp.clip(occ - r * c_r, 0, c_r - 1)
+        vals = jnp.take_along_axis(recv.reshape(lp, num_procs * c_r), idx,
+                                   axis=1)
+        return jnp.where(band, vals, v)
+
+    v0 = jnp.full((lp, e_local), -1, jnp.int32)
+    v, rounds = streaming.run_exchange(
+        grantable, c_r, max_rounds, emit, consume, v0, axis_name,
+        num_devices)
+
+    # Provider-side grants, reconstructed post-loop: pair q was served
+    # min(demand, rounds*C_r) ranks, of which those within the urn budget
+    # (flat slot < t_cap) yielded real endpoints.
+    served = jnp.minimum(recv_counts, rounds * c_r)
+    granted = jnp.sum(
+        jnp.clip(jnp.minimum(served, t_cap - offsets), 0, None),
+        axis=1).astype(jnp.int32)
+    return v, granted, rounds
 
 
 def pba_shard_body(rank, faction_row, s, cfg: PBAConfig, num_procs: int,
@@ -221,7 +328,7 @@ def pba_shard_body(rank, faction_row, s, cfg: PBAConfig, num_procs: int,
     ranks = jnp.reshape(jnp.asarray(rank, jnp.int32), (1,))
     s_blk = jnp.reshape(jnp.asarray(s, jnp.int32), (1,))
     num_devices = num_procs if axis_name is not None else 1
-    u, v, dropped, granted = pba_logical_block(
+    u, v, dropped, granted, _ = pba_logical_block(
         ranks, faction_row[None], s_blk, cfg, num_procs, pair_capacity,
         axis_name, num_devices)
     return u[0], v[0], dropped, granted[0]
@@ -252,17 +359,17 @@ def generate_pba(cfg: PBAConfig, table: FactionTable,
 
     def body(procs_blk, s_blk):
         ranks = blocking.logical_ranks(1, axis_name)
-        u, v, dropped, granted = pba_logical_block(
+        u, v, dropped, granted, rounds = pba_logical_block(
             ranks, procs_blk, s_blk, cfg, num_procs, pair_capacity,
             axis_name, num_procs)
-        return u, v, dropped[None], granted
+        return u, v, dropped[None], granted, rounds[None]
 
-    u, v, dropped, granted = jax.jit(
+    u, v, dropped, granted, rounds = jax.jit(
         spmd.shard_map(
             body, mesh=mesh,
             in_specs=(P(axis_name, None), P(axis_name)),
             out_specs=(P(axis_name, None), P(axis_name, None), P(axis_name),
-                       P(axis_name)),
+                       P(axis_name), P(axis_name)),
             check_vma=False,
         )
     )(procs, s)
@@ -273,7 +380,8 @@ def generate_pba(cfg: PBAConfig, table: FactionTable,
     dropped_n = int(dropped[0])
     stats = GenStats(requested_edges=requested,
                      emitted_edges=requested - dropped_n,
-                     dropped_edges=dropped_n, num_vertices=n)
+                     dropped_edges=dropped_n, num_vertices=n,
+                     exchange_rounds=int(rounds[0]))
     return edges, stats
 
 
@@ -302,16 +410,17 @@ def generate_pba_sharded(cfg: PBAConfig, table: FactionTable,
 
     def body(procs_blk, s_blk):
         ranks = blocking.logical_ranks(lp, axis_name)
-        u, v, dropped, _ = pba_logical_block(
+        u, v, dropped, _, rounds = pba_logical_block(
             ranks, procs_blk[0], s_blk[0], cfg, num_procs, pair_capacity,
             axis_name, d)
-        return u[None], v[None], dropped[None]
+        return u[None], v[None], dropped[None], rounds[None]
 
-    u, v, dropped = jax.jit(
+    u, v, dropped, rounds = jax.jit(
         spmd.shard_map(body, mesh=mesh,
                        in_specs=(P(axis_name, None, None), P(axis_name, None)),
                        out_specs=(P(axis_name, None, None),
-                                  P(axis_name, None, None), P(axis_name)),
+                                  P(axis_name, None, None), P(axis_name),
+                                  P(axis_name)),
                        check_vma=False)
     )(procs, s)
 
@@ -321,7 +430,8 @@ def generate_pba_sharded(cfg: PBAConfig, table: FactionTable,
     return (EdgeList(src=u, dst=v, num_vertices=n),
             GenStats(requested_edges=requested,
                      emitted_edges=requested - dropped_n,
-                     dropped_edges=dropped_n, num_vertices=n))
+                     dropped_edges=dropped_n, num_vertices=n,
+                     exchange_rounds=int(rounds[0])))
 
 
 def generate_pba_host(cfg: PBAConfig, table: FactionTable) -> tuple[EdgeList, GenStats]:
@@ -343,19 +453,20 @@ def generate_pba_host(cfg: PBAConfig, table: FactionTable) -> tuple[EdgeList, Ge
     def run(procs, s, ranks):
         # lp == P on one "device": the exchanges degenerate to local
         # transposes under the same blocked contract as the sharded path.
-        u, v, dropped, _ = pba_logical_block(
+        u, v, dropped, _, rounds = pba_logical_block(
             ranks, procs, s, cfg, num_procs, pair_capacity,
             axis_name=None, num_devices=1)
-        return u, v, dropped
+        return u, v, dropped, rounds
 
-    u, v, dropped = run(procs, s, ranks)
+    u, v, dropped, rounds = run(procs, s, ranks)
     n = num_procs * cfg.vertices_per_proc
     requested = num_procs * cfg.edges_per_proc
     dropped_n = int(dropped)
     return (EdgeList(src=u, dst=v, num_vertices=n),
             GenStats(requested_edges=requested,
                      emitted_edges=requested - dropped_n,
-                     dropped_edges=dropped_n, num_vertices=n))
+                     dropped_edges=dropped_n, num_vertices=n,
+                     exchange_rounds=int(rounds)))
 
 
 def serial_ba_reference(num_vertices: int, k: int, seed: int = 0) -> EdgeList:

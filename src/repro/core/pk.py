@@ -246,15 +246,48 @@ def generate_pk(seed: SeedGraph, cfg: PKConfig,
                            dropped_edges=e - emitted, num_vertices=n)
 
 
+def _xor_apply(src: np.ndarray, dst: np.ndarray, er_u: np.ndarray,
+               er_v: np.ndarray, n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Exact multiset XOR of an edge list with sampled flip edges.
+
+    XOR is an involution, so multiplicity matters on both sides:
+      * a flip edge sampled an even number of times cancels pairwise —
+        net no-op; odd multiplicity acts exactly once;
+      * an acting flip that matches an existing edge removes *one* copy of
+        it (an original with multiplicity > 1 keeps the rest);
+      * an acting flip with no match is appended.
+    O(E log E) via sorted matching.
+    """
+    key = src.astype(np.int64) * n + dst.astype(np.int64)
+    er_key = er_u.astype(np.int64) * n + er_v.astype(np.int64)
+    flip_key, flip_mult = np.unique(er_key, return_counts=True)
+    flip_key = flip_key[flip_mult % 2 == 1]  # even multiplicities cancel
+
+    order = np.argsort(key, kind="stable")
+    sorted_key = key[order]
+    pos = np.searchsorted(sorted_key, flip_key)
+    present = (pos < len(key)) & (sorted_key[np.minimum(pos, max(len(key) - 1, 0))]
+                                  == flip_key) if len(key) else np.zeros(len(flip_key), bool)
+    # flip_key entries are unique, so each present flip deletes one distinct
+    # original occurrence (its first in sort order).
+    keep_mask = np.ones(len(key), bool)
+    keep_mask[order[pos[present]]] = False
+    add_key = flip_key[~present]
+    add_u = (add_key // n).astype(np.int32)
+    add_v = (add_key % n).astype(np.int32)
+    new_src = np.concatenate([src[keep_mask], add_u]).astype(np.int32)
+    new_dst = np.concatenate([dst[keep_mask], add_v]).astype(np.int32)
+    return new_src, new_dst
+
+
 def xor_randomize(edges: EdgeList, flip_fraction: float = 0.01,
                   seed: int = 0) -> EdgeList:
     """The paper's second PK randomization: XOR the adjacency with a sparse
     Erdős–Rényi graph — edges present in both vanish, ER-only edges appear.
 
-    Static-shape realization: |E|·flip_fraction ER edges are appended; an
-    appended edge that duplicates an existing one *marks the original
-    deleted* (XOR semantics) with itself removed. Exact XOR for the sampled
-    pairs, O(E log E) via sorted matching.
+    |E|·flip_fraction ER edges are sampled and XORed with exact multiset
+    semantics (see :func:`_xor_apply`): duplicate samples cancel pairwise,
+    and a matching original loses exactly one copy.
     """
     import jax.numpy as jnp
     src, dst = edges.to_numpy()
@@ -263,18 +296,7 @@ def xor_randomize(edges: EdgeList, flip_fraction: float = 0.01,
     m = max(int(len(src) * flip_fraction), 1)
     er_u = rng.integers(0, n, m).astype(np.int64)
     er_v = rng.integers(0, n, m).astype(np.int64)
-
-    key = src.astype(np.int64) * n + dst.astype(np.int64)
-    er_key = er_u * n + er_v
-    # XOR: ER edges already present -> delete those originals and drop the
-    # ER copy; ER edges absent -> append.
-    present = np.isin(er_key, key)
-    delete_keys = np.unique(er_key[present])
-    keep_mask = ~np.isin(key, delete_keys)
-    add_u = er_u[~present]
-    add_v = er_v[~present]
-    new_src = np.concatenate([src[keep_mask], add_u]).astype(np.int32)
-    new_dst = np.concatenate([dst[keep_mask], add_v]).astype(np.int32)
+    new_src, new_dst = _xor_apply(src, dst, er_u, er_v, n)
     return EdgeList(src=jnp.asarray(new_src), dst=jnp.asarray(new_dst),
                     num_vertices=n)
 

@@ -1,11 +1,22 @@
 """Sharded edge-list storage: the generator as a dataset-production service.
 
 The paper's punchline is that generation outruns storage — but downstream
-graph applications still consume files. This writer streams a sharded
-EdgeList to per-shard .npy pairs + a JSON manifest, resumably: each shard
-is written atomically (tmp + rename) and the manifest records which shards
-are complete, so a preempted writer restarts where it stopped — the
-generation side restarts for free (seed + partition is the whole state).
+graph applications still consume files. Two writers share one on-disk
+format (per-shard .npz pairs + a JSON manifest):
+
+  * :func:`write_shards` — slice an in-memory EdgeList into shards.
+  * :class:`ShardWriter` — accept generator-produced *blocks* one at a time
+    (the out-of-core path: per-round PBA blocks, per-slab PK blocks), so the
+    full edge list never has to exist in memory at once.
+
+Both are resumable: each shard is written atomically (tmp + os.replace) and
+so is the manifest, which records which shards are complete plus their edge
+counts — a preempted writer restarts where it stopped, and the generation
+side restarts for free (seed + partition is the whole state). On resume the
+manifest's ``num_vertices`` / ``num_shards`` — and, when provided, the
+generator ``meta`` (seed, config) — must match the caller's; a mismatch
+means the directory holds a *different* graph and raises instead of
+silently interleaving shards of two graphs.
 """
 from __future__ import annotations
 
@@ -38,36 +49,133 @@ def _load_manifest(d: str) -> Optional[dict]:
         return json.load(f)
 
 
+def _dump_manifest(d: str, man: dict) -> None:
+    """Atomic manifest replace: a crash mid-dump must not corrupt resume
+    state, so write to a tmp file and os.replace into place."""
+    final = os.path.join(d, "manifest.json")
+    tmp = final + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(man, f)
+    os.replace(tmp, final)
+
+
+def _check_resume(man: dict, num_vertices: int, num_shards: int,
+                  meta: Optional[dict] = None) -> None:
+    if man["num_shards"] != num_shards:
+        raise ValueError(
+            f"shard count mismatch with existing manifest: have "
+            f"{man['num_shards']}, asked for {num_shards}")
+    if man["num_vertices"] != num_vertices:
+        raise ValueError(
+            f"num_vertices mismatch with existing manifest: have "
+            f"{man['num_vertices']}, asked for {num_vertices} — this "
+            "directory holds a different graph")
+    # Same shapes can still mean a different graph (e.g. a different seed
+    # at the same size); when both sides carry generator meta, it must
+    # agree or the resume would silently interleave shards of two graphs.
+    if meta and man.get("meta") and man["meta"] != meta:
+        raise ValueError(
+            f"generator meta mismatch with existing manifest: have "
+            f"{man['meta']}, asked for {meta} — this directory holds a "
+            "different graph")
+
+
+def _write_shard_file(out_dir: str, i: int, src: np.ndarray,
+                      dst: np.ndarray) -> int:
+    """Atomically write shard i (invalid -1 slots removed); returns #edges."""
+    keep = (src >= 0) & (dst >= 0)
+    src, dst = src[keep], dst[keep]
+    # NOTE: np.savez appends ".npz" unless the name already ends with it
+    tmp = os.path.join(out_dir, f".shard_{i:05d}.tmp.npz")
+    final = os.path.join(out_dir, f"shard_{i:05d}.npz")
+    np.savez_compressed(tmp, src=src.astype(np.int32),
+                        dst=dst.astype(np.int32))
+    os.replace(tmp, final)
+    return int(len(src))
+
+
 def write_shards(edges: EdgeList, out_dir: str, num_shards: int = 8,
                  meta: Optional[dict] = None) -> dict:
     """Write (resume) an edge list as num_shards .npz shards + manifest."""
     os.makedirs(out_dir, exist_ok=True)
-    man = _load_manifest(out_dir) or {
-        "num_vertices": edges.num_vertices,
-        "num_shards": num_shards,
-        "complete": [],
-        "meta": meta or {},
-    }
-    if man["num_shards"] != num_shards:
-        raise ValueError("shard count mismatch with existing manifest")
+    man = _load_manifest(out_dir)
+    if man is None:
+        man = {
+            "num_vertices": edges.num_vertices,
+            "num_shards": num_shards,
+            "complete": [],
+            "counts": {},
+            "meta": meta or {},
+        }
+    else:
+        _check_resume(man, edges.num_vertices, num_shards, meta)
+        man.setdefault("counts", {})
     src = np.asarray(edges.src).reshape(-1)
     dst = np.asarray(edges.dst).reshape(-1)
     bounds = np.linspace(0, len(src), num_shards + 1).astype(np.int64)
     for i in range(num_shards):
         if i in man["complete"]:
             continue
-        s = src[bounds[i]: bounds[i + 1]]
-        d = dst[bounds[i]: bounds[i + 1]]
-        keep = (s >= 0) & (d >= 0)
-        # NOTE: np.savez appends ".npz" unless the name already ends with it
-        tmp = os.path.join(out_dir, f".shard_{i:05d}.tmp.npz")
-        final = os.path.join(out_dir, f"shard_{i:05d}.npz")
-        np.savez_compressed(tmp, src=s[keep], dst=d[keep])
-        os.replace(tmp, final)
+        n = _write_shard_file(out_dir, i, src[bounds[i]: bounds[i + 1]],
+                              dst[bounds[i]: bounds[i + 1]])
         man["complete"].append(i)
-        with open(os.path.join(out_dir, "manifest.json"), "w") as f:
-            json.dump(man, f)
+        man["counts"][str(i)] = n
+        _dump_manifest(out_dir, man)
     return man
+
+
+class ShardWriter:
+    """Resumable block-stream writer: one generator block per shard.
+
+    The out-of-core seam: a streaming generator (core/stream.py) produces
+    deterministic block ``i`` on demand, so the writer only needs to say
+    which blocks are still missing — a restart regenerates exactly those.
+    Shard files and the manifest are both written atomically.
+    """
+
+    def __init__(self, out_dir: str, num_vertices: int, num_shards: int,
+                 meta: Optional[dict] = None):
+        os.makedirs(out_dir, exist_ok=True)
+        self.out_dir = out_dir
+        man = _load_manifest(out_dir)
+        if man is None:
+            man = {
+                "num_vertices": num_vertices,
+                "num_shards": num_shards,
+                "complete": [],
+                "counts": {},
+                "meta": meta or {},
+            }
+            _dump_manifest(out_dir, man)
+        else:
+            _check_resume(man, num_vertices, num_shards, meta)
+            man.setdefault("counts", {})
+        self.manifest = man
+
+    def is_complete(self, i: int) -> bool:
+        return i in self.manifest["complete"]
+
+    def missing(self) -> list:
+        done = set(self.manifest["complete"])
+        return [i for i in range(self.manifest["num_shards"])
+                if i not in done]
+
+    def write_block(self, i: int, src: np.ndarray, dst: np.ndarray) -> None:
+        if not 0 <= i < self.manifest["num_shards"]:
+            raise ValueError(
+                f"block {i} out of range for {self.manifest['num_shards']} "
+                "shards")
+        if self.is_complete(i):
+            return
+        n = _write_shard_file(self.out_dir, i, np.asarray(src),
+                              np.asarray(dst))
+        self.manifest["complete"].append(i)
+        self.manifest["counts"][str(i)] = n
+        _dump_manifest(self.out_dir, self.manifest)
+
+    @property
+    def edges_written(self) -> int:
+        return int(sum(self.manifest["counts"].values()))
 
 
 def read_shards(out_dir: str) -> tuple[np.ndarray, np.ndarray, dict]:

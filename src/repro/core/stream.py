@@ -1,0 +1,294 @@
+"""Out-of-core streaming generation: edge blocks from generator to disk.
+
+Converts the generators from "the graph must fit on device" to "the graph
+must fit on disk". Each stream exposes deterministic, independently
+regenerable blocks:
+
+  * :class:`PBAStream` — the multi-round exchange contract
+    (runtime/streaming.py) driven from the host: block ``r`` is exactly the
+    set of edges whose request rank falls in round r's window
+    ``[r*C_r, (r+1)*C_r)``. The device resolves one processor's urn at a
+    time (sized to that processor's own demand); endpoints stream through
+    host RAM (O(edges)) into per-round blocks.
+  * :class:`PKStream` — closed-form expansion of contiguous index slabs
+    (DESIGN.md §2): block ``i`` is edge indices [i*slab, (i+1)*slab), which
+    come free because PK edge t depends only on the digits of t.
+
+:func:`stream_to_shards` drives a stream into storage.ShardWriter. Blocks
+are deterministic given (config, seed), so a preempted run restarts by
+regenerating only the shards the manifest says are missing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import storage
+from repro.core.factions import FactionTable, validate_table
+from repro.core.graph import GenStats
+from repro.core.pba import (PBAConfig, _phase1, _phase2_pool,
+                            default_pair_capacity, occurrence_rank)
+from repro.core.pk import (PKConfig, SeedGraph, decompose_base, expand_chunk,
+                           pk_sizes)
+from repro.runtime import blocking, streaming
+
+
+@dataclasses.dataclass
+class EdgeBlock:
+    """One streamed block: compacted host-side edges of block ``index``."""
+
+    index: int
+    src: np.ndarray
+    dst: np.ndarray
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+class PBAStream:
+    """Per-round streaming PBA: generate hub-tail-complete graphs whose
+    exchange would not fit on device in one shot.
+
+    Memory shape: the device runs phase 1 plus *one processor's* urn
+    resolution at a time — each pool is sized to that processor's own
+    received demand (bucketed to powers of two for compile reuse), never
+    the rectangular (P, max_demand) a vmapped pool would need, which on the
+    hub layout would dwarf the edge list itself. The host keeps O(edges)
+    state (tags, ranks, pools) and serves block ``r`` — exactly the edges
+    whose request rank falls in round r's window [r*C_r, (r+1)*C_r) — as a
+    banded gather, so the graph only has to fit on disk plus host RAM, not
+    on device.
+
+    auto_capacity=True (default) gives each processor's urn exactly its
+    received demand as budget, so no edge is dropped for urn exhaustion
+    either — ``dropped_edges == 0`` for any faction layout (the urn draws
+    then differ from the static-budget device path: pool values depend on
+    the size they are drawn at, but the stream stays deterministic given
+    (cfg, table)). With auto_capacity=False every pool is drawn at
+    ``cfg.total_capacity_factor * E`` exactly as on-device generation
+    draws it, and blocks concatenate to the bit-identical edge multiset of
+    ``generate_pba_host`` with the same streaming config.
+    """
+
+    def __init__(self, cfg: PBAConfig, table: FactionTable,
+                 auto_capacity: bool = True):
+        validate_table(table)
+        self.cfg = cfg
+        self.table = table
+        self._auto_capacity = auto_capacity
+        self.num_procs = table.num_procs
+        self.num_vertices = self.num_procs * cfg.vertices_per_proc
+        self.requested_edges = self.num_procs * cfg.edges_per_proc
+        pair_capacity = cfg.pair_capacity or default_pair_capacity(
+            cfg.edges_per_proc, int(table.s.min()))
+        self.round_cap = streaming.round_capacity(
+            pair_capacity, cfg.exchange_rounds or 1)
+
+        cfg_ = cfg
+        num_procs = self.num_procs
+        e_local = cfg.edges_per_proc
+
+        @jax.jit
+        def prep(procs, s, ranks):
+            a, counts = blocking.map_logical(
+                lambda r, fr, ss: _phase1(r, fr, ss, cfg_, num_procs),
+                ranks, procs, s)
+            occ = jax.vmap(occurrence_rank)(a)
+            return a, occ, counts
+
+        ranks = jnp.arange(num_procs, dtype=jnp.int32)
+        a, occ, counts = prep(jnp.asarray(table.procs),
+                              jnp.asarray(table.s), ranks)
+        self._a = np.asarray(a)
+        self._occ = np.asarray(occ)
+        counts_h = np.asarray(counts)          # (requester, provider)
+        self.num_blocks = streaming.rounds_needed(
+            max(int(counts_h.max()), 1), self.round_cap)
+
+        demand = counts_h.sum(axis=0, dtype=np.int64)  # per-provider total
+        base_t_cap = cfg.total_capacity_factor * e_local
+        if auto_capacity:
+            t_cap = demand.copy()  # exact budget: zero urn-exhaustion drops
+        else:
+            t_cap = np.full(num_procs, base_t_cap, np.int64)
+        self._t_cap = t_cap
+
+        # Resolve one processor's urn at a time. The urn draws depend on
+        # the pool length (threefry blocks over the whole array), so the
+        # budget a pool is *drawn at* is part of the graph's identity:
+        # auto mode draws at each processor's own demand (pow-2-bucketed
+        # to bound recompilation at ~log2(max demand) traces), while
+        # parity mode draws at exactly the static device budget so blocks
+        # reproduce ``generate_pba_host`` slot for slot.
+        pool_fns: dict = {}
+        rows = []
+        for p in range(num_procs):
+            used = int(min(demand[p], t_cap[p]))
+            draw_cap = (_next_pow2(max(used, 1)) if auto_capacity
+                        else base_t_cap)
+            fn = pool_fns.get(draw_cap)
+            if fn is None:
+                fn = jax.jit(lambda r, t=draw_cap: _phase2_pool(r, cfg_, t))
+                pool_fns[draw_cap] = fn
+            rows.append(np.asarray(fn(jnp.int32(p)))[: e_local + used])
+
+        # Resolve every edge's endpoint once (host, vectorized): the edge
+        # (i, j) with tag a[i,j]=p and occurrence rank occ[i,j] was granted
+        # provider p's pool slot offsets[p, i] + occ[i,j] (offsets from the
+        # unclipped demand — same addressing as _grant_round).
+        recv = counts_h.T.astype(np.int64)     # (provider, requester)
+        offsets = np.cumsum(recv, axis=1) - recv
+        row_start = np.concatenate(
+            [[0], np.cumsum([len(r) for r in rows[:-1]])]).astype(np.int64)
+        pool_flat = np.concatenate(rows)
+        prov = self._a
+        slot = offsets[prov, np.arange(num_procs)[:, None]] + self._occ
+        in_budget = slot < t_cap[prov]
+        idx = row_start[prov] + e_local + np.where(in_budget, slot, 0)
+        v = np.where(in_budget, pool_flat[idx], -1).astype(np.int32)
+        u = (np.arange(num_procs, dtype=np.int32)[:, None]
+             * np.int32(cfg.vertices_per_proc)
+             + (np.arange(e_local, dtype=np.int32)
+                // cfg.edges_per_vertex)[None, :])
+
+        # Bucket edges by round once, so block(i) is a slice instead of a
+        # full (P, E) band rescan per round (which would make streaming
+        # O(E * num_blocks) in exactly the small-C_r regime it targets).
+        block_id = (self._occ // self.round_cap).ravel()
+        order = np.argsort(block_id, kind="stable")
+        self._bounds = np.searchsorted(
+            block_id[order], np.arange(self.num_blocks + 1))
+        self._u_sorted = u.ravel()[order]
+        self._v_sorted = v.ravel()[order]
+        del self._a, self._occ  # only the sorted views are needed now
+
+    @property
+    def exchange_rounds(self) -> int:
+        return self.num_blocks
+
+    def meta(self) -> dict:
+        # Everything the generated graph depends on: resume validation
+        # (storage._check_resume) compares this dict, so any omitted knob
+        # would let shards of two different graphs interleave silently.
+        # The faction table is fingerprinted (two tables with identical cfg
+        # still generate different graphs).
+        import hashlib
+        digest = hashlib.sha256(
+            self.table.procs.tobytes() + self.table.s.tobytes()
+        ).hexdigest()[:16]
+        return {"generator": "pba", "seed": self.cfg.seed,
+                "procs": self.num_procs,
+                "vertices_per_proc": self.cfg.vertices_per_proc,
+                "edges_per_vertex": self.cfg.edges_per_vertex,
+                "interfaction_prob": self.cfg.interfaction_prob,
+                "total_capacity_factor": self.cfg.total_capacity_factor,
+                "auto_capacity": self._auto_capacity,
+                "table_digest": digest,
+                "round_capacity": self.round_cap,
+                "urn_budget": int(self._t_cap.max())}
+
+    def block(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        """Edges resolved in round ``i``: request ranks [i*C_r, (i+1)*C_r)."""
+        if not 0 <= i < self.num_blocks:
+            raise ValueError(f"block {i} out of range [0, {self.num_blocks})")
+        lo, hi = self._bounds[i], self._bounds[i + 1]
+        u, v = self._u_sorted[lo:hi], self._v_sorted[lo:hi]
+        keep = v >= 0
+        return u[keep], v[keep]
+
+    def iter_blocks(self) -> Iterator[EdgeBlock]:
+        for i in range(self.num_blocks):
+            src, dst = self.block(i)
+            yield EdgeBlock(i, src, dst)
+
+
+class PKStream:
+    """Per-slab streaming PK: contiguous index ranges, zero communication.
+
+    Block ``i`` covers edge indices [i*slab_edges, (i+1)*slab_edges); the
+    slab start is digit-decomposed exactly on host, so block generation
+    needs only int32 device arithmetic regardless of global edge count.
+    The slab index doubles as the RNG rank, so blocks are deterministic
+    given (cfg.seed, slab_edges) — independent of how many were already
+    written.
+    """
+
+    def __init__(self, seed: SeedGraph, cfg: PKConfig,
+                 slab_edges: int = 1 << 20):
+        SeedGraph.validate(seed)
+        if slab_edges < 1:
+            raise ValueError(f"slab_edges must be >= 1, got {slab_edges}")
+        if slab_edges > 2**31 - 1:
+            raise ValueError(f"slab_edges {slab_edges} exceeds int32")
+        self.seed = seed
+        self.cfg = cfg
+        self.slab_edges = slab_edges
+        n, e = pk_sizes(seed, cfg)
+        if n > 2**31 - 1:
+            raise ValueError(f"n0^L = {n} exceeds int32 vertex-id space")
+        self.num_vertices = n
+        self.requested_edges = e
+        self.num_blocks = -(-e // slab_edges)
+        self.exchange_rounds = 1
+
+        su, sv = jnp.asarray(seed.u), jnp.asarray(seed.v)
+        n0, e0, levels = seed.num_vertices, seed.num_edges, cfg.levels
+
+        @jax.jit
+        def expand(t, base, rank):
+            return expand_chunk(t, base, su, sv, n0, e0, levels, cfg, rank)
+
+        self._expand = expand
+        self._t = jnp.arange(slab_edges, dtype=jnp.int32)
+
+    def meta(self) -> dict:
+        return {"generator": "pk", "seed": self.cfg.seed,
+                "levels": self.cfg.levels, "noise": self.cfg.noise,
+                "delete_prob": self.cfg.delete_prob,
+                "slab_edges": self.slab_edges}
+
+    def block(self, i: int) -> tuple[np.ndarray, np.ndarray]:
+        if not 0 <= i < self.num_blocks:
+            raise ValueError(f"block {i} out of range [0, {self.num_blocks})")
+        t0 = i * self.slab_edges
+        base = jnp.asarray(decompose_base(t0, self.seed.num_edges,
+                                          self.cfg.levels))
+        u, v = self._expand(self._t, base, jnp.int32(i))
+        m = min(self.slab_edges, self.requested_edges - t0)
+        u = np.asarray(u)[:m]
+        v = np.asarray(v)[:m]
+        keep = (u >= 0) & (v >= 0)
+        return u[keep], v[keep]
+
+    def iter_blocks(self) -> Iterator[EdgeBlock]:
+        for i in range(self.num_blocks):
+            src, dst = self.block(i)
+            yield EdgeBlock(i, src, dst)
+
+
+def stream_to_shards(stream, out_dir: str,
+                     meta: Optional[dict] = None) -> tuple[dict, GenStats]:
+    """Drive a stream's blocks into the resumable shard writer.
+
+    Returns (manifest, stats). On restart only the blocks the manifest
+    reports missing are regenerated — completed shards are never rewritten
+    or even recomputed.
+    """
+    writer = storage.ShardWriter(out_dir, stream.num_vertices,
+                                 stream.num_blocks,
+                                 meta={**stream.meta(), **(meta or {})})
+    for i in writer.missing():
+        src, dst = stream.block(i)
+        writer.write_block(i, src, dst)
+    emitted = writer.edges_written
+    stats = GenStats(requested_edges=stream.requested_edges,
+                     emitted_edges=emitted,
+                     dropped_edges=stream.requested_edges - emitted,
+                     num_vertices=stream.num_vertices,
+                     exchange_rounds=stream.exchange_rounds)
+    return writer.manifest, stats

@@ -8,11 +8,15 @@ Submodules:
   blocking — logical-processors-over-devices primitives: map_logical,
              transpose_counts / transpose_payload (the (lp, d, lp)
              distributed transpose), tail masking, all_reduce_sum.
+  streaming — multi-round streamed exchange over the blocked-transpose
+             contract: run_exchange loops (lp, P, C_r) rounds until the
+             globally all-reduced residual hits zero (bounded memory,
+             zero drops).
 
 No module outside ``repro.runtime`` may reference ``jax.shard_map`` or
 ``jax.experimental.shard_map`` directly (enforced by tests/test_runtime.py).
 """
-from repro.runtime import blocking, spmd
+from repro.runtime import blocking, spmd, streaming
 from repro.runtime.blocking import (all_reduce_sum, logical_ranks,
                                     map_logical, mask_tail, split_logical,
                                     tail_mask, transpose_counts,
@@ -22,7 +26,7 @@ from repro.runtime.spmd import (api_info, cost_analysis, ensure_mesh,
                                 shard_map)
 
 __all__ = [
-    "spmd", "blocking",
+    "spmd", "blocking", "streaming",
     "shard_map", "make_mesh", "make_proc_mesh", "ensure_mesh", "mesh_size",
     "api_info", "cost_analysis",
     "map_logical", "logical_ranks", "split_logical", "transpose_counts",

@@ -1,0 +1,125 @@
+"""Multi-round streaming exchange over the blocked-transpose contract.
+
+The single-shot exchange (one :func:`blocking.transpose_payload` of an
+``(lp, P, C)`` buffer) hard-caps every (sender, receiver) pair at ``C``
+items: overflow slots are silently dropped, and ``P * C`` device memory
+bounds the largest exchange a device can host. This module streams the
+*same logical exchange* in rounds of per-pair capacity ``C_r``: round ``r``
+ships request ranks ``[r*C_r, (r+1)*C_r)`` of every pair, so a pair owing
+``c`` items is served over ``ceil(c / C_r)`` rounds and nothing is ever
+dropped for lack of pair capacity, while the peak exchange buffer shrinks
+from ``P*C`` to ``P*C_r`` per logical processor.
+
+Round/residual invariants (the streaming contract):
+
+  window    w_r(c) = clip(c - r*C_r, 0, C_r)     items a pair ships in round r
+  residual  s_r(c) = max(c - (r+1)*C_r, 0)       items still owed after round r
+
+  sum_r w_r(c) == c           every request is served exactly once
+  s_r(c) == 0  for  r >= ceil(c / C_r) - 1       rounds terminate
+
+Rounds run under one ``lax.while_loop`` whose continuation predicate is the
+*globally all-reduced* residual, so every device computes the identical trip
+count and the collective inside the loop body stays uniform across the mesh.
+On the host path (``axis_name=None``) the transpose degenerates to a local
+swapaxes and the all-reduce to identity, so the host and sharded runs of the
+same logical program execute the same rounds on the same values — the
+bit-parity argument of ``blocking.py`` extends to the streamed exchange by
+construction.
+
+Blocked-layout extension: everything here is expressed through
+``blocking.transpose_payload`` / ``blocking.all_reduce_sum``, so a future
+2-D-mesh (hierarchical all_to_all) transpose upgrades the streaming path for
+free — the round/residual logic never looks at the device axis.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime import blocking
+
+
+def round_capacity(total_capacity: int, num_rounds: int) -> int:
+    """Per-round pair capacity C_r = ceil(C_total / R), at least 1.
+
+    Splitting a legacy single-shot budget ``C_total`` over ``R`` rounds keeps
+    the aggregate per-pair service >= the legacy capacity while shrinking the
+    live exchange buffer R-fold.
+    """
+    if total_capacity < 1:
+        raise ValueError(f"total_capacity must be >= 1, got {total_capacity}")
+    if num_rounds < 1:
+        raise ValueError(f"num_rounds must be >= 1, got {num_rounds}")
+    return -(-total_capacity // num_rounds)
+
+
+def rounds_needed(max_pair_count: int, round_cap: int) -> int:
+    """Static round bound: ceil(max possible per-pair count / C_r).
+
+    With ``max_pair_count`` the largest count any (sender, receiver) pair can
+    carry (for PBA: E_local — a processor cannot request more endpoints than
+    it has edges), this many rounds guarantee a zero residual for *any*
+    counts matrix. The while_loop exits earlier as soon as the global
+    residual hits zero; this is only the safety bound.
+    """
+    if round_cap < 1:
+        raise ValueError(f"round_cap must be >= 1, got {round_cap}")
+    return max(-(-max_pair_count // round_cap), 1)
+
+
+def round_window(counts: jax.Array, r, round_cap: int) -> jax.Array:
+    """w_r: how many items each pair ships in round ``r`` (elementwise)."""
+    return jnp.clip(counts - r * round_cap, 0, round_cap)
+
+
+def residual_counts(counts: jax.Array, r, round_cap: int) -> jax.Array:
+    """s_r: how many items each pair still owes *after* round ``r``."""
+    return jnp.maximum(counts - (r + 1) * round_cap, 0)
+
+
+def run_exchange(counts: jax.Array, round_cap: int, max_rounds: int,
+                 emit: Callable[[jax.Array], jax.Array],
+                 consume: Callable[[jax.Array, jax.Array, object], object],
+                 init_carry, axis_name: Optional[str], num_devices: int):
+    """Run the multi-round streamed exchange; returns (carry, rounds_run).
+
+    counts: (lp, P) int32 — per-pair items that will actually ship (demand,
+      clipped by any provider-side budget so exhausted pairs do not keep
+      the loop alive shipping pure padding). Only its global sum drives
+      termination; requester- and provider-side totals agree globally, so
+      both sides drain together. Request ranks past a pair's count simply
+      never arrive — consumers must initialize their carry to the
+      "missing" value.
+    emit(r) -> (lp, P, C_r): the provider-side payload for round ``r`` —
+      request ranks [r*C_r, (r+1)*C_r) of every pair, -1 padding beyond the
+      round window.
+    consume(r, recv, carry) -> carry: fold the received (lp, P, C_r) block
+      of round ``r`` into the carry (e.g. scatter into the edge list).
+    init_carry: pytree of arrays threaded through the loop.
+
+    The trip count is data-dependent but globally uniform: the loop
+    continues while the all-reduced residual is positive, bounded by the
+    static ``max_rounds``.
+    """
+    owed0 = blocking.all_reduce_sum(
+        jnp.sum(counts, dtype=jnp.int32), axis_name)
+
+    def cond(state):
+        r, _, owed = state
+        return (r < max_rounds) & (owed > 0)
+
+    def body(state):
+        r, carry, _ = state
+        recv = blocking.transpose_payload(emit(r), axis_name, num_devices)
+        carry = consume(r, recv, carry)
+        owed = blocking.all_reduce_sum(
+            jnp.sum(residual_counts(counts, r, round_cap), dtype=jnp.int32),
+            axis_name)
+        return r + 1, carry, owed
+
+    rounds, carry, _ = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), init_carry, owed0))
+    return carry, rounds

@@ -114,6 +114,33 @@ def test_xor_preserves_vertex_space():
     assert d.min() >= 0 and d.max() < 100
 
 
+def test_xor_apply_multiplicity_semantics():
+    """Exact multiset XOR: duplicate flips cancel pairwise, a matching
+    original loses exactly one copy (not all copies)."""
+    from repro.core.pk import _xor_apply
+    n = 10
+    src = np.array([1, 1, 3], np.int32)  # (1,2) has multiplicity 2
+    dst = np.array([2, 2, 4], np.int32)
+
+    def apply(eu, ev):
+        s, d = _xor_apply(src, dst, np.array(eu), np.array(ev), n)
+        return sorted(zip(s.tolist(), d.tolist()))
+
+    # one flip of a duplicated original removes exactly one copy
+    assert apply([1], [2]) == [(1, 2), (3, 4)]
+    # even flip multiplicity cancels pairwise: no-op
+    assert apply([1, 1], [2, 2]) == [(1, 2), (1, 2), (3, 4)]
+    assert apply([5, 5], [6, 6]) == [(1, 2), (1, 2), (3, 4)]
+    # odd multiplicity acts exactly once
+    assert apply([1, 1, 1], [2, 2, 2]) == [(1, 2), (3, 4)]
+    # absent edge with odd multiplicity is appended once
+    assert apply([5], [6]) == [(1, 2), (1, 2), (3, 4), (5, 6)]
+    # empty original: only odd-multiplicity flips appear
+    s, d = _xor_apply(np.empty(0, np.int32), np.empty(0, np.int32),
+                      np.array([5, 5, 7]), np.array([6, 6, 8]), n)
+    assert sorted(zip(s.tolist(), d.tolist())) == [(7, 8)]
+
+
 def test_xor_randomize_is_involution():
     """XOR with the same ER sample twice restores the original edge set."""
     pairs = [(i, (i * 3 + 1) % 64) for i in range(64)]

@@ -1,0 +1,94 @@
+"""Pod-scale hierarchical exchange: lp x topology sweep, flat vs two-hop.
+
+The paper's scalability claim (1B vertices / 5B edges in 13s) rests on
+minimizing inter-processor communication; at pod scale a flat all_to_all
+over every chip is the wrong pattern — the two-hop intra-pod/cross-pod
+exchange moves the bulk of bytes over fast local links and crosses the thin
+pod fabric in aggregated messages. This sweep compiles the real sharded PBA
+program at P = lp * D logical ranks (up to the paper's 1000) for the flat
+1-D topology and both 2-D pods factorizations, reporting:
+
+  * bytes_accessed — total compiled-program bytes via the
+    runtime.spmd.cost_analysis shim (version-portable);
+  * a2a_local / a2a_cross — all_to_all result bytes by replica-group span
+    (contiguous groups = intra-pod / flat, strided = cross-pod hop);
+  * cross_wire — the (g-1)/g fraction the cross-pod fabric actually
+    carries (the gate's inequality: cross_wire(hier) <= wire(flat)).
+
+Usage (forced host devices — the collectives are real, the links are not):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m benchmarks.hierarchical_exchange
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import emit, time_jax
+from repro.core import FactionSpec, PBAConfig, make_factions
+from repro.core.pba import pba_logical_block
+from repro.launch.hlo_stats import all_to_all_span_bytes
+from repro.runtime import Topology, blocking, spmd
+
+PAIR_CAPACITY = 8
+LP_SWEEP = (1, 25, 125)  # P = lp * 8 = 8 .. 1000 on the 8-device smoke mesh
+
+
+def _compile(cfg: PBAConfig, table, topo: Topology):
+    num_procs = table.num_procs
+    lp = topo.lp(num_procs)
+    d = topo.num_devices
+    mesh = topo.build_mesh()
+    spec = topo.spec_axes
+
+    def body(procs_blk, s_blk):
+        ranks = blocking.logical_ranks(lp, topo)
+        u, v, dropped, _, rounds = pba_logical_block(
+            ranks, procs_blk[0], s_blk[0], cfg, num_procs, PAIR_CAPACITY,
+            topo)
+        return u[None], v[None], dropped[None], rounds[None]
+
+    fn = jax.jit(spmd.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(spec, None, None), P(spec, None)),
+        out_specs=(P(spec, None, None), P(spec, None, None), P(spec),
+                   P(spec)),
+        check_vma=False))
+    procs = jnp.asarray(table.procs).reshape(d, lp, table.max_s)
+    s = jnp.asarray(table.s).reshape(d, lp)
+    return fn, (procs, s)
+
+
+def run() -> list[str]:
+    rows = []
+    d = len(jax.devices())
+    topos = [Topology.flat(d)]
+    if d % 2 == 0 and d >= 4:
+        topos += [Topology.pods(2, d // 2), Topology.pods(d // 2, 2)]
+    cfg = PBAConfig(vertices_per_proc=40, edges_per_vertex=2, seed=7,
+                    pair_capacity=PAIR_CAPACITY)
+    for lp in LP_SWEEP:
+        p = lp * d
+        table = make_factions(p, FactionSpec(max(p // 2, 1), 2,
+                                             max(p // 2, 2), seed=1))
+        for topo in topos:
+            fn, args = _compile(cfg, table, topo)
+            compiled = fn.lower(*args).compile()
+            cost = spmd.cost_analysis(compiled)
+            span = all_to_all_span_bytes(compiled.as_text())
+            t = time_jax(lambda: fn(*args), warmup=1, iters=3)
+            rows.append(emit(
+                f"hier_exchange_p{p}_{topo.label}", t * 1e6,
+                f"lp={lp};bytes_accessed="
+                f"{cost.get('bytes accessed', 0.0):.0f};"
+                f"a2a_local={span['local']:.0f};"
+                f"a2a_cross={span['cross']:.0f};"
+                f"cross_wire={span['cross_wire']:.0f};"
+                f"flat_wire={span['local_wire'] + span['cross_wire']:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -25,16 +25,16 @@ import jax.numpy as jnp
 
 def _compiled_bytes(cfg: PBAConfig, table) -> float:
     """Bytes accessed of the full host-mode PBA program (runtime-routed)."""
-    from repro.core.pba import default_pair_capacity, pba_logical_block
+    from repro.core.pba import _derived_pair_capacity, pba_logical_block
+    from repro.runtime import Topology
 
     num_procs = table.num_procs
-    pair_capacity = cfg.pair_capacity or default_pair_capacity(
-        cfg.edges_per_proc, int(table.s.min()))
+    pair_capacity = _derived_pair_capacity(cfg, table)
+    topo = Topology.host()
 
     def run(procs, s, ranks):
         u, v, dropped, _, rounds = pba_logical_block(
-            ranks, procs, s, cfg, num_procs, pair_capacity,
-            axis_name=None, num_devices=1)
+            ranks, procs, s, cfg, num_procs, pair_capacity, topo)
         return u, v, dropped, rounds
 
     return bytes_accessed(run, jnp.asarray(table.procs),

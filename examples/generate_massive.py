@@ -44,6 +44,11 @@ def main() -> None:
                     help="stream exchange 2 over R rounds of capacity "
                          "ceil(C/R) — zero dropped edges, 1/R exchange "
                          "memory; default: legacy single-shot exchange")
+    ap.add_argument("--pods", default=None, metavar="RxC",
+                    help="run the exchange over a hierarchical RxC pod "
+                         "topology (e.g. 2x4: two-hop intra-pod/cross-pod "
+                         "all_to_all; bit-identical output, pod-local "
+                         "bulk traffic); default: flat 1-D mesh")
     ap.add_argument("--pk-levels", type=int, default=4)
     ap.add_argument("--out-dir", default=None,
                     help="out-of-core mode: stream per-round PBA blocks and "
@@ -92,6 +97,20 @@ def main() -> None:
                     exchange_rounds=args.exchange_rounds,
                     seed=state["seed"])
 
+    topology = None
+    if args.pods:
+        if args.out_dir:
+            raise SystemExit(
+                "--pods selects the on-device hierarchical exchange; the "
+                "out-of-core stream driver (--out-dir) runs the host path "
+                "— drop one of the two flags.")
+        from repro.runtime import Topology
+        rows, cols = (int(x) for x in args.pods.lower().split("x"))
+        if rows * cols != n_dev:
+            raise SystemExit(f"--pods {args.pods} needs {rows * cols} "
+                             f"devices, have {n_dev}")
+        topology = Topology.pods(rows, cols)
+
     if args.out_dir:
         # Out-of-core: generator blocks go straight to resumable shards;
         # a preempted run re-executes only the missing blocks.
@@ -119,7 +138,7 @@ def main() -> None:
 
     t0 = time.perf_counter()
     gen = generate_pba if state["procs"] == n_dev else generate_pba_sharded
-    edges, stats = gen(cfg, table)
+    edges, stats = gen(cfg, table, topology=topology)
     jax.block_until_ready(edges.src)
     t = time.perf_counter() - t0
     rounds = (f" rounds={stats.exchange_rounds}"

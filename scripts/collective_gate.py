@@ -1,20 +1,27 @@
-"""Collective-bytes regression gate (ROADMAP open item).
+"""Collective-bytes regression gate (ROADMAP open item), per-topology.
 
 Compiles the real sharded PBA exchange program on the forced-host-device
 mesh and reads its total 'bytes accessed' through the version-portable
-``repro.runtime.spmd.cost_analysis`` shim. Two mechanical checks:
+``repro.runtime.spmd.cost_analysis`` shim. Three mechanical checks:
 
-  1. Capacity scaling: shrinking ``pair_capacity`` 4x must shrink the
-     compiled program's bytes accessed — if the exchange buffers ever stop
-     depending on the capacity knob (e.g. an accidental full-size
+  1. Capacity scaling (flat topology): shrinking ``pair_capacity`` 4x must
+     shrink the compiled program's bytes accessed — if the exchange buffers
+     ever stop depending on the capacity knob (e.g. an accidental full-size
      materialization sneaks in), this inequality breaks immediately and
      version-independently.
-  2. Baseline drift: bytes accessed at the reference config must stay
-     within TOLERANCE of scripts/collective_bytes_baseline.json (committed —
-     results/ is gitignored, and a baseline that vanishes on every fresh
-     clone would make this half of the gate vacuous). A missing baseline is
-     (re)written and reported, so the gate bootstraps itself; delete the
-     file to re-baseline after an intentional exchange change.
+  2. Hierarchical locality at pod scale: at P = 1000 logical ranks over the
+     2-D pods topologies, the two-hop transpose's *cross-pod wire bytes*
+     (the (g-1)/g fraction of the strided-replica-group all_to_alls — what
+     the thin cross-pod fabric actually carries) must stay <= the flat
+     all_to_all's total wire bytes at equal (P, C). This is the whole point
+     of the topology-aware exchange; if a layout change ever routes bulk
+     bytes over the cross-pod hop, the gate trips.
+  3. Baseline drift, per topology: bytes accessed at the reference config
+     must stay within TOLERANCE of scripts/collective_bytes_baseline.json
+     (committed — results/ is gitignored, and a baseline that vanishes on
+     every fresh clone would make this half of the gate vacuous). Missing
+     baselines are (re)written and reported, so the gate bootstraps itself;
+     delete the file to re-baseline after an intentional exchange change.
 
 Exits 0 with a notice when the backend offers no cost analysis.
 
@@ -34,34 +41,59 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import FactionSpec, PBAConfig, make_factions
 from repro.core.pba import pba_logical_block
-from repro.runtime import blocking, spmd
+from repro.launch.hlo_stats import all_to_all_span_bytes
+from repro.runtime import Topology, blocking, spmd
 
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "collective_bytes_baseline.json")
 TOLERANCE = 0.25  # fractional drift allowed before the gate trips
 
+# Pod-scale reference: the paper's 1000 MPI ranks as logical processors
+# over the forced host devices (lp = 1000 / D).
+POD_SCALE_P = 1000
+POD_SCALE_CFG = PBAConfig(vertices_per_proc=40, edges_per_vertex=2, seed=7,
+                          pair_capacity=8)
 
-def compiled_bytes(cfg: PBAConfig, table, pair_capacity: int,
-                   axis_name: str = "proc") -> float:
+
+def compile_exchange(cfg: PBAConfig, table, pair_capacity: int,
+                     topo: Topology):
+    """Compiled sharded PBA program for ``topo`` (lp = P / D per device)."""
     num_procs = table.num_procs
-    mesh = spmd.make_proc_mesh(num_procs, axis_name)
+    lp = topo.lp(num_procs)
+    d = topo.num_devices
+    mesh = topo.build_mesh()
+    spec = topo.spec_axes
 
     def body(procs_blk, s_blk):
-        ranks = blocking.logical_ranks(1, axis_name)
-        u, v, dropped, granted, rounds = pba_logical_block(
-            ranks, procs_blk, s_blk, cfg, num_procs, pair_capacity,
-            axis_name, num_procs)
-        return u, v, dropped[None], rounds[None]
+        ranks = blocking.logical_ranks(lp, topo)
+        u, v, dropped, _, rounds = pba_logical_block(
+            ranks, procs_blk[0], s_blk[0], cfg, num_procs, pair_capacity,
+            topo)
+        return u[None], v[None], dropped[None], rounds[None]
 
     fn = jax.jit(spmd.shard_map(
         body, mesh=mesh,
-        in_specs=(P(axis_name, None), P(axis_name)),
-        out_specs=(P(axis_name, None), P(axis_name, None), P(axis_name),
-                   P(axis_name)),
+        in_specs=(P(spec, None, None), P(spec, None)),
+        out_specs=(P(spec, None, None), P(spec, None, None), P(spec),
+                   P(spec)),
         check_vma=False))
-    compiled = fn.lower(jnp.asarray(table.procs),
-                        jnp.asarray(table.s)).compile()
+    procs = jnp.asarray(table.procs).reshape(d, lp, table.max_s)
+    s = jnp.asarray(table.s).reshape(d, lp)
+    return fn.lower(procs, s).compile()
+
+
+def compiled_bytes(cfg: PBAConfig, table, pair_capacity: int,
+                   topo: Topology) -> float:
+    compiled = compile_exchange(cfg, table, pair_capacity, topo)
     return float(spmd.cost_analysis(compiled).get("bytes accessed", 0.0))
+
+
+def gate_topologies(n_dev: int) -> list[Topology]:
+    topos = [Topology.flat(n_dev)]
+    if n_dev >= 4 and n_dev % 2 == 0:
+        topos.append(Topology.pods(2, n_dev // 2))
+        topos.append(Topology.pods(n_dev // 2, 2))
+    return topos
 
 
 def main() -> int:
@@ -69,9 +101,11 @@ def main() -> int:
     table = make_factions(n_dev, FactionSpec(max(n_dev // 2, 1), 2,
                                              max(n_dev // 2, 2), seed=1))
     cfg = PBAConfig(vertices_per_proc=200, edges_per_vertex=3, seed=7)
+    flat = Topology.flat(n_dev)
 
-    big = compiled_bytes(cfg, table, pair_capacity=256)
-    small = compiled_bytes(cfg, table, pair_capacity=64)
+    # --- 1: capacity scaling on the flat topology ---------------------------
+    big = compiled_bytes(cfg, table, 256, flat)
+    small = compiled_bytes(cfg, table, 64, flat)
     if big == 0.0:
         print("collective gate: backend offers no cost analysis — skipped")
         return 0
@@ -84,31 +118,91 @@ def main() -> int:
               file=sys.stderr)
         return 1
 
+    # --- 2: pod-scale hierarchical locality at P = 1000 ---------------------
+    topos = gate_topologies(n_dev)
+    if POD_SCALE_P % n_dev:
+        print(f"collective gate: {POD_SCALE_P} ranks do not divide over "
+              f"{n_dev} devices — skipping the pod-scale leg")
+        pod_bytes: dict[str, float] = {}
+    else:
+        pod_table = make_factions(POD_SCALE_P,
+                                  FactionSpec(POD_SCALE_P // 2, 2,
+                                              POD_SCALE_P // 2, seed=1))
+        cap = POD_SCALE_CFG.pair_capacity
+        pod_bytes = {}
+        spans = {}
+        for topo in topos:
+            compiled = compile_exchange(POD_SCALE_CFG, pod_table, cap, topo)
+            pod_bytes[topo.label] = float(
+                spmd.cost_analysis(compiled).get("bytes accessed", 0.0))
+            spans[topo.label] = all_to_all_span_bytes(compiled.as_text())
+        flat_span = spans[flat.label]
+        flat_wire = flat_span["local_wire"] + flat_span["cross_wire"]
+        print(f"collective gate: P={POD_SCALE_P} flat all_to_all wire bytes "
+              f"{flat_wire:.0f}")
+        for topo in topos[1:]:
+            cross = spans[topo.label]["cross_wire"]
+            print(f"collective gate: P={POD_SCALE_P} {topo.label} "
+                  f"cross-pod wire bytes {cross:.0f}")
+            if cross > flat_wire:
+                print(f"collective gate FAILED: {topo.label} cross-pod wire "
+                      f"bytes {cross:.0f} exceed the flat all_to_all's "
+                      f"{flat_wire:.0f} at equal (P, C) — the hierarchical "
+                      "transpose is routing bulk bytes over the thin "
+                      "cross-pod fabric", file=sys.stderr)
+                return 1
+            if spans[topo.label]["n_cross"] == 0:
+                print(f"collective gate FAILED: {topo.label} compiled to no "
+                      "strided-replica-group all_to_all — the cross-pod hop "
+                      "is missing", file=sys.stderr)
+                return 1
+
+    # --- 3: per-topology baseline drift -------------------------------------
     record = {"config": {"devices": n_dev, "vertices_per_proc": 200,
-                         "edges_per_vertex": 3, "pair_capacity": 256},
-              "bytes_accessed": big,
+                         "edges_per_vertex": 3, "pair_capacity": 256,
+                         "pod_scale_p": POD_SCALE_P,
+                         "pod_scale_pair_capacity":
+                             POD_SCALE_CFG.pair_capacity},
+              "topologies": {"flat_c256": big, **pod_bytes},
               "jax_version": jax.__version__}
     if not os.path.exists(BASELINE):
-        os.makedirs(os.path.dirname(BASELINE), exist_ok=True)
         with open(BASELINE, "w") as f:
             json.dump(record, f, indent=2)
         print(f"collective gate: wrote new baseline {BASELINE} "
-              f"({big:.0f} bytes)")
+              f"({sorted(record['topologies'])})")
         return 0
 
     with open(BASELINE) as f:
         base = json.load(f)
-    limit = base["bytes_accessed"] * (1 + TOLERANCE)
-    if big > limit:
-        print(f"collective gate FAILED: bytes accessed {big:.0f} exceeds "
-              f"baseline {base['bytes_accessed']:.0f} "
-              f"(+{TOLERANCE:.0%} limit {limit:.0f}; baseline jax "
-              f"{base.get('jax_version')}). If the exchange-volume increase "
-              f"is intentional, delete {BASELINE} to re-baseline.",
-              file=sys.stderr)
-        return 1
-    print(f"collective gate OK: {big:.0f} <= {limit:.0f} "
-          f"(baseline {base['bytes_accessed']:.0f} +{TOLERANCE:.0%})")
+    base_topos = base.get("topologies")
+    if base_topos is None:  # pre-topology schema: migrate in place
+        base_topos = {flat.label: base["bytes_accessed"]}
+    stale = False
+    for label, measured in record["topologies"].items():
+        if label not in base_topos:
+            base_topos[label] = measured
+            stale = True
+            print(f"collective gate: baselined new topology {label} "
+                  f"({measured:.0f} bytes)")
+            continue
+        limit = base_topos[label] * (1 + TOLERANCE)
+        if measured > limit:
+            print(f"collective gate FAILED: {label} bytes accessed "
+                  f"{measured:.0f} exceeds baseline {base_topos[label]:.0f} "
+                  f"(+{TOLERANCE:.0%} limit {limit:.0f}; baseline jax "
+                  f"{base.get('jax_version')}). If the exchange-volume "
+                  f"increase is intentional, delete {BASELINE} to "
+                  "re-baseline.", file=sys.stderr)
+            return 1
+        print(f"collective gate OK: {label} {measured:.0f} <= {limit:.0f} "
+              f"(baseline {base_topos[label]:.0f} +{TOLERANCE:.0%})")
+    if stale:
+        # Persist only the newly baselined labels — committed baselines win
+        # over this run's measurements (otherwise within-tolerance drift
+        # would ratchet into the baseline on every run that adds a label).
+        base["topologies"] = {**record["topologies"], **base_topos}
+        with open(BASELINE, "w") as f:
+            json.dump(base, f, indent=2)
     return 0
 
 

@@ -64,6 +64,32 @@ assert int(deg.sum()) == 2 * st_d.emitted_edges
 print("8-device smoke OK")
 PY
 
+echo "== 2x4 hierarchical smoke =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python - <<'PY'
+import dataclasses
+import numpy as np
+from repro.core import PBAConfig, generate_pba_host, hub_factions
+from repro.core.pba import generate_pba_sharded
+from repro.runtime import Topology
+
+# Two-hop intra-pod/cross-pod exchange must be bit-identical to the host
+# path, single-shot and streamed, on both pod factorizations.
+table = hub_factions(8)
+cfg = PBAConfig(vertices_per_proc=150, edges_per_vertex=3, seed=5,
+                pair_capacity=16, total_capacity_factor=8)
+for cfg_i in (cfg, dataclasses.replace(cfg, exchange_rounds=4)):
+    e_h, st_h = generate_pba_host(cfg_i, table)
+    for topo in (Topology.pods(2, 4), Topology.pods(4, 2)):
+        e_s, st_s = generate_pba_sharded(cfg_i, table, topology=topo)
+        np.testing.assert_array_equal(np.asarray(e_s.src).reshape(-1),
+                                      np.asarray(e_h.src).reshape(-1))
+        np.testing.assert_array_equal(np.asarray(e_s.dst).reshape(-1),
+                                      np.asarray(e_h.dst).reshape(-1))
+        assert st_s.dropped_edges == st_h.dropped_edges, (st_s, st_h)
+        assert st_s.exchange_rounds == st_h.exchange_rounds, (st_s, st_h)
+print("hierarchical smoke OK")
+PY
+
 echo "== collective-bytes gate =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python scripts/collective_gate.py

@@ -15,23 +15,37 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.graph import EdgeList
 from repro.runtime import blocking, spmd
+from repro.runtime.topology import Topology
+
+
+def _resolve(mesh: Optional[Mesh], axis_name: str,
+             topology: Optional[Topology]) -> tuple[Topology, Mesh]:
+    if topology is None:
+        topology = (Topology.from_mesh(mesh) if mesh is not None
+                    else Topology.flat(spmd.device_count(), axis_name))
+    if mesh is None:
+        mesh = topology.build_mesh()
+    return topology, mesh
 
 
 def degree_counts_sharded(edges: EdgeList, mesh: Optional[Mesh] = None,
                           axis_name: str = "proc",
-                          bin_chunk: int = 1 << 20) -> jax.Array:
+                          bin_chunk: int = 1 << 20,
+                          topology: Optional[Topology] = None) -> jax.Array:
     """Global per-vertex degrees from a device-sharded edge list.
 
     Each device histograms its local edges (Pallas kernel on TPU) and the
-    partials are psum-reduced. The vertex space is processed in one shot if
-    it fits (n+1 int32 per device) — bin_chunk bounds the per-call kernel
-    launch, matching the kernel's BIN_BLOCK tiling.
+    partials are psum-reduced over every topology axis. The vertex space is
+    processed in one shot if it fits (n+1 int32 per device) — bin_chunk
+    bounds the per-call kernel launch, matching the kernel's BIN_BLOCK
+    tiling.
     """
     from repro.kernels import ops as kops
-    mesh = spmd.ensure_mesh(mesh, axis_name=axis_name)
+    topology, mesh = _resolve(mesh, axis_name, topology)
+    spec = topology.spec_axes
     n = edges.num_vertices
-    src = edges.src.reshape(spmd.mesh_size(mesh), -1)
-    dst = edges.dst.reshape(spmd.mesh_size(mesh), -1)
+    src = edges.src.reshape(topology.num_devices, -1)
+    dst = edges.dst.reshape(topology.num_devices, -1)
 
     def body(s_blk, d_blk):
         s = s_blk.reshape(-1)
@@ -41,33 +55,36 @@ def degree_counts_sharded(edges: EdgeList, mesh: Optional[Mesh] = None,
         d = jnp.where(valid, d, n)
         both = jnp.concatenate([s, d])
         counts = kops.histogram(both, n + 1)[:n]
-        return blocking.all_reduce_sum(counts, axis_name)[None]
+        return blocking.all_reduce_sum(counts, topology)[None]
 
     out = jax.jit(spmd.shard_map(
-        body, mesh=mesh, in_specs=(P(axis_name, None), P(axis_name, None)),
-        out_specs=P(axis_name, None), check_vma=False))(src, dst)
+        body, mesh=mesh, in_specs=(P(spec, None), P(spec, None)),
+        out_specs=P(spec, None), check_vma=False))(src, dst)
     return out[0]
 
 
 def edge_count_sharded(edges: EdgeList, mesh: Optional[Mesh] = None,
-                       axis_name: str = "proc") -> int:
+                       axis_name: str = "proc",
+                       topology: Optional[Topology] = None) -> int:
     """Global valid-edge count without gathering the edge list."""
-    mesh = spmd.ensure_mesh(mesh, axis_name=axis_name)
-    src = edges.src.reshape(spmd.mesh_size(mesh), -1)
+    topology, mesh = _resolve(mesh, axis_name, topology)
+    spec = topology.spec_axes
+    src = edges.src.reshape(topology.num_devices, -1)
 
     def body(s_blk):
         c = jnp.sum(s_blk.reshape(-1) >= 0, dtype=jnp.int32)
-        return blocking.all_reduce_sum(c, axis_name)[None]
+        return blocking.all_reduce_sum(c, topology)[None]
 
     out = jax.jit(spmd.shard_map(body, mesh=mesh,
-                                 in_specs=(P(axis_name, None),),
-                                 out_specs=P(axis_name),
+                                 in_specs=(P(spec, None),),
+                                 out_specs=P(spec),
                                  check_vma=False))(src)
     return int(out[0])
 
 
 def max_degree_sharded(edges: EdgeList, mesh: Optional[Mesh] = None,
-                       axis_name: str = "proc") -> int:
+                       axis_name: str = "proc",
+                       topology: Optional[Topology] = None) -> int:
     """Global max degree (hub size) — the Fig. 4 heavy-tail witness."""
-    deg = degree_counts_sharded(edges, mesh, axis_name)
+    deg = degree_counts_sharded(edges, mesh, axis_name, topology=topology)
     return int(jnp.max(deg))

@@ -56,6 +56,9 @@ class GenStats:
 
     exchange_rounds: how many rounds the endpoint exchange actually ran
     (1 for the legacy single-shot exchange and for PK, which has none).
+    pair_capacity: the per-(sender, receiver) exchange budget C the run
+    used — explicit from the config or the derived latency/memory-aware
+    default (0 for generators without an exchange, e.g. PK).
     """
 
     requested_edges: int
@@ -63,6 +66,7 @@ class GenStats:
     dropped_edges: int
     num_vertices: int
     exchange_rounds: int = 1
+    pair_capacity: int = 0
 
     @property
     def drop_fraction(self) -> float:

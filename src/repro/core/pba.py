@@ -33,6 +33,7 @@ from repro.core import rng as rng_lib
 from repro.core.factions import FactionTable, validate_table
 from repro.core.graph import EdgeList, GenStats
 from repro.runtime import blocking, spmd, streaming
+from repro.runtime.topology import Topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,15 +74,59 @@ class PBAConfig:
         return self.vertices_per_proc * self.edges_per_vertex
 
 
-def default_pair_capacity(edges_per_proc: int, min_s: int) -> int:
-    """Static per-pair capacity heuristic.
+# Fraction of device memory the live exchange buffer may claim (1/16), and
+# the per-round floor that keeps round count from being dominated by
+# per-collective latency instead of bytes.
+_EXCHANGE_MEM_DIVISOR = 16
+_MIN_ROUND_CAPACITY = 16
 
-    The phase-1 urn is a Pólya urn over ~s initial colors; per-pair load
-    concentrates like E/s with heavy upper tails, so budget a generous
-    multiple. Clipped to E_local (a pair can never need more).
+
+def default_pair_capacity(edges_per_proc: int, min_s: int,
+                          num_procs: int = 0,
+                          exchange_rounds: Optional[int] = None,
+                          memory_bytes: Optional[int] = None) -> int:
+    """Static per-pair capacity heuristic, collective-latency/memory-aware.
+
+    Base load term: the phase-1 urn is a Pólya urn over ~s initial colors;
+    per-pair load concentrates like E/s with heavy upper tails, so budget a
+    generous multiple, clipped to E_local (a pair can never need more).
+
+    At pod scale (``num_procs`` given) the live exchange buffer becomes the
+    binding constraint: the total capacity is clamped so each *logical
+    processor's* (P, C_r) int32 round buffer fits 1/16 of device memory
+    (probed via ``runtime.spmd.device_memory_bytes``; fixed fallback on
+    backends without stats). The budget is deliberately per logical
+    processor, not per device: the derived capacity must be a pure function
+    of (cfg, table) or the host (lp = P) and sharded (lp = P/D) runs of the
+    same graph would disagree — a device hosting lp logical processors
+    therefore materializes lp of these buffers, so at extreme lp set
+    ``pair_capacity`` (or ``exchange_rounds``) explicitly. Streamed runs
+    (``exchange_rounds`` set) recover any clamped capacity by running extra
+    rounds — ``run_exchange`` repeats past R until the residual is zero —
+    but keep C_r >= 16 so each round moves enough bytes to amortize the
+    collective's latency rather than degenerating into thousands of tiny
+    all_to_alls.
+
+    Note the probed memory makes the *default* backend-dependent: a CPU
+    host (fixed fallback) and an accelerator (reported bytes_limit) can
+    derive different capacities at large P, and the capacity is part of the
+    graph's identity. Cross-backend validation runs should pin the budget
+    explicitly — every generator logs the chosen value in
+    ``GenStats.pair_capacity``, so a replay passes
+    ``dataclasses.replace(cfg, pair_capacity=stats.pair_capacity)``.
     """
     c = 8 * edges_per_proc // max(min_s, 1)
-    return int(min(max(c, 64), edges_per_proc))
+    c = int(min(max(c, 64), edges_per_proc))
+    if num_procs:
+        mem = (memory_bytes if memory_bytes is not None
+               else spmd.device_memory_bytes())
+        budget = max(mem // _EXCHANGE_MEM_DIVISOR, 1)
+        rounds = max(exchange_rounds or 1, 1)
+        cap = (budget // (4 * num_procs)) * rounds
+        if exchange_rounds is not None:
+            cap = max(cap, _MIN_ROUND_CAPACITY * rounds)
+        c = int(max(min(c, cap), 1))
+    return c
 
 
 def resolve_pointers(ptr: jax.Array, terminal: jax.Array,
@@ -220,22 +265,22 @@ def _grant_round(pool, recv_counts, r, round_cap: int, e_local: int,
 
 
 def pba_logical_block(ranks, procs_blk, s_blk, cfg: PBAConfig,
-                      num_procs: int, pair_capacity: int,
-                      axis_name: Optional[str], num_devices: int):
+                      num_procs: int, pair_capacity: int, topo: Topology):
     """Run this device's block of lp logical PBA processors.
 
     ranks: (lp,) global logical ids; procs_blk: (lp, max_s) faction rows;
     s_blk: (lp,) faction sizes. The two exchanges route through the shared
     blocking/streaming primitives — (lp, P) counts and (lp, P, C) or
     per-round (lp, P, C_r) endpoint buffers under the runtime's
-    blocked-transpose contract. Returns (u (lp, E), v (lp, E), dropped
-    scalar over all procs, granted (lp,), rounds scalar).
-    Host path: axis_name=None with num_devices=1 and lp == P.
+    blocked-transpose contract for ``topo`` (flat 1-D all_to_all, 2-D pods
+    hierarchical two-hop, or host swapaxes). Returns (u (lp, E), v (lp, E),
+    dropped scalar over all procs, granted (lp,), rounds scalar).
+    Host path: ``Topology.host()`` with lp == P.
     """
     a, counts = blocking.map_logical(
         lambda r, fr, ss: _phase1(r, fr, ss, cfg, num_procs),
         ranks, procs_blk, s_blk)                          # (lp, E), (lp, P)
-    recv_counts = blocking.transpose_counts(counts, axis_name, num_devices)
+    recv_counts = blocking.transpose_counts(counts, topo)
     lp = a.shape[0]
     occ = jax.vmap(occurrence_rank)(a)
 
@@ -245,7 +290,7 @@ def pba_logical_block(ranks, procs_blk, s_blk, cfg: PBAConfig,
         out_buf, granted = blocking.map_logical(
             lambda r, rc: _phase2(r, rc, cfg, pair_capacity),
             ranks, recv_counts)                           # (lp, P, C), (lp,)
-        in_buf = blocking.transpose_payload(out_buf, axis_name, num_devices)
+        in_buf = blocking.transpose_payload(out_buf, topo)
         v = jnp.take_along_axis(
             in_buf.reshape(lp, num_procs * pair_capacity),
             a * pair_capacity + jnp.minimum(occ, pair_capacity - 1), axis=1)
@@ -254,20 +299,18 @@ def pba_logical_block(ranks, procs_blk, s_blk, cfg: PBAConfig,
     else:
         v, granted, rounds = _streamed_exchange2(
             a, occ, counts, recv_counts, ranks, cfg, pair_capacity,
-            num_procs, axis_name, num_devices)
+            num_procs, topo)
 
     j = jnp.arange(cfg.edges_per_proc, dtype=jnp.int32)
     u = (ranks[:, None] * jnp.int32(cfg.vertices_per_proc)
          + (j // cfg.edges_per_vertex)[None, :])
     u = jnp.where(v >= 0, u, -1)
-    dropped = blocking.all_reduce_sum(jnp.sum(v < 0, dtype=jnp.int32),
-                                      axis_name)
+    dropped = blocking.all_reduce_sum(jnp.sum(v < 0, dtype=jnp.int32), topo)
     return u, v, dropped, granted, rounds
 
 
 def _streamed_exchange2(a, occ, counts, recv_counts, ranks, cfg: PBAConfig,
-                        pair_capacity: int, num_procs: int,
-                        axis_name: Optional[str], num_devices: int):
+                        pair_capacity: int, num_procs: int, topo: Topology):
     """Exchange 2 as a multi-round stream (see runtime/streaming.py).
 
     Round r serves request ranks [r*C_r, (r+1)*C_r) of every (sender,
@@ -305,8 +348,7 @@ def _streamed_exchange2(a, occ, counts, recv_counts, ranks, cfg: PBAConfig,
 
     v0 = jnp.full((lp, e_local), -1, jnp.int32)
     v, rounds = streaming.run_exchange(
-        grantable, c_r, max_rounds, emit, consume, v0, axis_name,
-        num_devices)
+        grantable, c_r, max_rounds, emit, consume, v0, topo)
 
     # Provider-side grants, reconstructed post-loop: pair q was served
     # min(demand, rounds*C_r) ranks, of which those within the urn budget
@@ -319,57 +361,96 @@ def _streamed_exchange2(a, occ, counts, recv_counts, ranks, cfg: PBAConfig,
 
 
 def pba_shard_body(rank, faction_row, s, cfg: PBAConfig, num_procs: int,
-                   pair_capacity: int, axis_name: Optional[str]):
+                   pair_capacity: int, topo: Topology):
     """Per-device PBA program (one logical proc per device).
 
-    ``axis_name`` None => single-device (P must be 1). Thin lp=1 wrapper
+    ``Topology.host()`` => single-device (P must be 1). Thin lp=1 wrapper
     over :func:`pba_logical_block`.
     """
     ranks = jnp.reshape(jnp.asarray(rank, jnp.int32), (1,))
     s_blk = jnp.reshape(jnp.asarray(s, jnp.int32), (1,))
-    num_devices = num_procs if axis_name is not None else 1
     u, v, dropped, granted, _ = pba_logical_block(
         ranks, faction_row[None], s_blk, cfg, num_procs, pair_capacity,
-        axis_name, num_devices)
+        topo)
     return u[0], v[0], dropped, granted[0]
 
 
-def generate_pba(cfg: PBAConfig, table: FactionTable,
-                 mesh: Optional[Mesh] = None,
-                 axis_name: str = "proc") -> tuple[EdgeList, GenStats]:
-    """Generate a PBA graph on ``mesh`` (1-D over all its devices).
+def _resolve_topology(topology: Optional[Topology], mesh: Optional[Mesh],
+                      axis_name: str,
+                      default_devices: int) -> tuple[Topology, Mesh]:
+    """Resolve the (topology, mesh) pair a sharded generator runs on.
 
-    With mesh=None, runs the P-processor program on however many real devices
-    exist — P == table.num_procs must equal the mesh size. For P logical
+    Explicit topology wins (mesh built over its axes when absent); an
+    explicit 1-D mesh implies the flat topology over its axes; neither
+    given => flat over ``default_devices``. When both are given their axes
+    must agree — a mesh from one topology with specs from another would
+    silently scramble the blocked layout.
+    """
+    if topology is None:
+        topology = (Topology.from_mesh(mesh) if mesh is not None
+                    else Topology.flat(default_devices, axis_name))
+    if topology.is_host:
+        raise ValueError(
+            "host topology has no device mesh — use generate_pba_host")
+    if mesh is None:
+        mesh = topology.build_mesh()
+    elif (tuple(mesh.axis_names) != topology.axis_names
+          or tuple(int(mesh.shape[n]) for n in mesh.axis_names)
+          != topology.axis_sizes):
+        raise ValueError(
+            f"mesh axes {dict(mesh.shape)} do not match topology "
+            f"{topology.label}")
+    return topology, mesh
+
+
+def _derived_pair_capacity(cfg: PBAConfig, table: FactionTable) -> int:
+    """The capacity every generator path uses for (cfg, table) — shared so
+    host/sharded/stream runs of the same config agree on the budget."""
+    return cfg.pair_capacity or default_pair_capacity(
+        cfg.edges_per_proc, int(table.s.min()), num_procs=table.num_procs,
+        exchange_rounds=cfg.exchange_rounds)
+
+
+def generate_pba(cfg: PBAConfig, table: FactionTable,
+                 mesh: Optional[Mesh] = None, axis_name: str = "proc",
+                 topology: Optional[Topology] = None
+                 ) -> tuple[EdgeList, GenStats]:
+    """Generate a PBA graph with one processor per device of ``topology``.
+
+    With mesh=None and topology=None, runs the P-processor program on a
+    flat mesh over P real devices — P == table.num_procs must equal the
+    topology's device count. ``Topology.pods(r, c)`` routes the two
+    exchanges hierarchically (bit-identical output). For P logical
     processors on 1 device (testing), use :func:`generate_pba_host`.
     """
     validate_table(table)
     num_procs = table.num_procs
-    if mesh is None:
-        if len(jax.devices()) < num_procs:
-            raise ValueError(
-                f"need {num_procs} devices, have {len(jax.devices())}; "
-                "use generate_pba_host for logical-P-on-1-device")
-        mesh = spmd.make_proc_mesh(num_procs, axis_name)
-    pair_capacity = cfg.pair_capacity or default_pair_capacity(
-        cfg.edges_per_proc, int(table.s.min()))
+    topology, mesh = _resolve_topology(topology, mesh, axis_name, num_procs)
+    if topology.num_devices != num_procs:
+        raise ValueError(
+            f"generate_pba runs 1 proc per device: table has {num_procs} "
+            f"procs but topology {topology.label} has "
+            f"{topology.num_devices} devices; use generate_pba_sharded "
+            "for P = lp * D")
+    pair_capacity = _derived_pair_capacity(cfg, table)
+    spec = topology.spec_axes
 
     procs = jnp.asarray(table.procs)
     s = jnp.asarray(table.s)
 
     def body(procs_blk, s_blk):
-        ranks = blocking.logical_ranks(1, axis_name)
+        ranks = blocking.logical_ranks(1, topology)
         u, v, dropped, granted, rounds = pba_logical_block(
             ranks, procs_blk, s_blk, cfg, num_procs, pair_capacity,
-            axis_name, num_procs)
+            topology)
         return u, v, dropped[None], granted, rounds[None]
 
     u, v, dropped, granted, rounds = jax.jit(
         spmd.shard_map(
             body, mesh=mesh,
-            in_specs=(P(axis_name, None), P(axis_name)),
-            out_specs=(P(axis_name, None), P(axis_name, None), P(axis_name),
-                       P(axis_name), P(axis_name)),
+            in_specs=(P(spec, None), P(spec)),
+            out_specs=(P(spec, None), P(spec, None), P(spec), P(spec),
+                       P(spec)),
             check_vma=False,
         )
     )(procs, s)
@@ -381,46 +462,51 @@ def generate_pba(cfg: PBAConfig, table: FactionTable,
     stats = GenStats(requested_edges=requested,
                      emitted_edges=requested - dropped_n,
                      dropped_edges=dropped_n, num_vertices=n,
-                     exchange_rounds=int(rounds[0]))
+                     exchange_rounds=int(rounds[0]),
+                     pair_capacity=pair_capacity)
     return edges, stats
 
 
 def generate_pba_sharded(cfg: PBAConfig, table: FactionTable,
                          mesh: Optional[Mesh] = None,
-                         axis_name: str = "proc") -> tuple[EdgeList, GenStats]:
-    """P *logical* processors sharded over D devices (P = k·D).
+                         axis_name: str = "proc",
+                         topology: Optional[Topology] = None
+                         ) -> tuple[EdgeList, GenStats]:
+    """P *logical* processors sharded over a device topology (P = lp·D).
 
     The paper ran 1000 MPI ranks; a pod has 256 chips — production runs
     several logical processors per chip. Each device vmaps its local block
-    of logical procs; the two exchanges become device-level all_to_alls of
-    the (local, P)-blocked counts/endpoint tensors (a distributed
-    transpose). Bit-identical to generate_pba_host for the same table
-    (tested).
+    of logical procs; the two exchanges become device-level distributed
+    transposes of the (local, P)-blocked counts/endpoint tensors — one flat
+    all_to_all on a 1-D topology, the hierarchical two-hop
+    intra-pod/cross-pod exchange on ``Topology.pods(r, c)``. Bit-identical
+    to generate_pba_host for the same table across every topology (tested).
     """
     validate_table(table)
     num_procs = table.num_procs
-    mesh = spmd.ensure_mesh(mesh, axis_name=axis_name)
-    d = spmd.mesh_size(mesh)
-    lp = blocking.split_logical(num_procs, d)  # logical procs per device
-    pair_capacity = cfg.pair_capacity or default_pair_capacity(
-        cfg.edges_per_proc, int(table.s.min()))
+    topology, mesh = _resolve_topology(topology, mesh, axis_name,
+                                       len(jax.devices()))
+    d = topology.num_devices
+    lp = topology.lp(num_procs)  # logical procs per device
+    pair_capacity = _derived_pair_capacity(cfg, table)
+    spec = topology.spec_axes
 
     procs = jnp.asarray(table.procs).reshape(d, lp, table.max_s)
     s = jnp.asarray(table.s).reshape(d, lp)
 
     def body(procs_blk, s_blk):
-        ranks = blocking.logical_ranks(lp, axis_name)
+        ranks = blocking.logical_ranks(lp, topology)
         u, v, dropped, _, rounds = pba_logical_block(
             ranks, procs_blk[0], s_blk[0], cfg, num_procs, pair_capacity,
-            axis_name, d)
+            topology)
         return u[None], v[None], dropped[None], rounds[None]
 
     u, v, dropped, rounds = jax.jit(
         spmd.shard_map(body, mesh=mesh,
-                       in_specs=(P(axis_name, None, None), P(axis_name, None)),
-                       out_specs=(P(axis_name, None, None),
-                                  P(axis_name, None, None), P(axis_name),
-                                  P(axis_name)),
+                       in_specs=(P(spec, None, None), P(spec, None)),
+                       out_specs=(P(spec, None, None),
+                                  P(spec, None, None), P(spec),
+                                  P(spec)),
                        check_vma=False)
     )(procs, s)
 
@@ -431,20 +517,32 @@ def generate_pba_sharded(cfg: PBAConfig, table: FactionTable,
             GenStats(requested_edges=requested,
                      emitted_edges=requested - dropped_n,
                      dropped_edges=dropped_n, num_vertices=n,
-                     exchange_rounds=int(rounds[0])))
+                     exchange_rounds=int(rounds[0]),
+                     pair_capacity=pair_capacity))
 
 
-def generate_pba_host(cfg: PBAConfig, table: FactionTable) -> tuple[EdgeList, GenStats]:
+def generate_pba_host(cfg: PBAConfig, table: FactionTable,
+                      topology: Optional[Topology] = None
+                      ) -> tuple[EdgeList, GenStats]:
     """Run the P-logical-processor PBA program on a single device via vmap.
 
     Exchanges become transposes of the vmapped batch — bit-identical logical
     semantics to the distributed run (tested), handy for CPU validation of
-    large P.
+    large P. When validating *across backends* with ``pair_capacity=None``,
+    pin the budget from the distributed run's ``GenStats.pair_capacity``
+    (the memory-aware default probes per-backend device memory — see
+    :func:`default_pair_capacity`). ``topology``, if given, must be
+    ``Topology.host()`` — device topologies belong to
+    :func:`generate_pba_sharded`.
     """
     validate_table(table)
+    if topology is not None and not topology.is_host:
+        raise ValueError(
+            f"generate_pba_host runs the host topology; pass "
+            f"{topology.label} to generate_pba_sharded instead")
+    topo = Topology.host()
     num_procs = table.num_procs
-    pair_capacity = cfg.pair_capacity or default_pair_capacity(
-        cfg.edges_per_proc, int(table.s.min()))
+    pair_capacity = _derived_pair_capacity(cfg, table)
     procs = jnp.asarray(table.procs)
     s = jnp.asarray(table.s)
     ranks = jnp.arange(num_procs, dtype=jnp.int32)
@@ -454,8 +552,7 @@ def generate_pba_host(cfg: PBAConfig, table: FactionTable) -> tuple[EdgeList, Ge
         # lp == P on one "device": the exchanges degenerate to local
         # transposes under the same blocked contract as the sharded path.
         u, v, dropped, _, rounds = pba_logical_block(
-            ranks, procs, s, cfg, num_procs, pair_capacity,
-            axis_name=None, num_devices=1)
+            ranks, procs, s, cfg, num_procs, pair_capacity, topo)
         return u, v, dropped, rounds
 
     u, v, dropped, rounds = run(procs, s, ranks)
@@ -466,7 +563,8 @@ def generate_pba_host(cfg: PBAConfig, table: FactionTable) -> tuple[EdgeList, Ge
             GenStats(requested_edges=requested,
                      emitted_edges=requested - dropped_n,
                      dropped_edges=dropped_n, num_vertices=n,
-                     exchange_rounds=int(rounds)))
+                     exchange_rounds=int(rounds),
+                     pair_capacity=pair_capacity))
 
 
 def serial_ba_reference(num_vertices: int, k: int, seed: int = 0) -> EdgeList:

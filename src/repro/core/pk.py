@@ -34,6 +34,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import rng as rng_lib
 from repro.core.graph import EdgeList, GenStats
 from repro.runtime import blocking, spmd
+from repro.runtime.topology import Topology
 
 
 @dataclasses.dataclass(frozen=True)
@@ -198,15 +199,24 @@ def generate_pk_host(seed: SeedGraph, cfg: PKConfig,
 
 def generate_pk(seed: SeedGraph, cfg: PKConfig,
                 mesh: Optional[Mesh] = None, axis_name: str = "proc",
-                use_kernel: bool = False) -> tuple[EdgeList, GenStats]:
+                use_kernel: bool = False,
+                topology: Optional[Topology] = None
+                ) -> tuple[EdgeList, GenStats]:
     """Distributed PK: contiguous index range per device, zero communication.
 
     The per-device range start is digit-decomposed host-side; devices do pure
-    int32 arithmetic. Embarrassingly parallel, exactly load balanced.
+    int32 arithmetic. Embarrassingly parallel, exactly load balanced. The
+    topology only partitions the index space (ranks are pod-major linear
+    device indices) — there is nothing to exchange hierarchically.
     """
     SeedGraph.validate(seed)
-    mesh = spmd.ensure_mesh(mesh, axis_name=axis_name)
-    num_procs = spmd.mesh_size(mesh)
+    if topology is None:
+        topology = (Topology.from_mesh(mesh) if mesh is not None
+                    else Topology.flat(len(jax.devices()), axis_name))
+    if mesh is None:
+        mesh = topology.build_mesh()
+    num_procs = topology.num_devices
+    spec = topology.spec_axes
     n, e = pk_sizes(seed, cfg)
     chunk = -(-e // num_procs)  # ceil
     _check_int32(seed, cfg, chunk)
@@ -219,7 +229,7 @@ def generate_pk(seed: SeedGraph, cfg: PKConfig,
     su, sv = jnp.asarray(seed.u), jnp.asarray(seed.v)
 
     def body(base_blk):
-        rank = jax.lax.axis_index(axis_name)
+        rank = blocking.device_index(topology)
         t = jnp.arange(chunk, dtype=jnp.int32)
         if use_kernel:
             from repro.kernels import ops as kops
@@ -235,8 +245,8 @@ def generate_pk(seed: SeedGraph, cfg: PKConfig,
         return u[None], v[None]
 
     u, v = jax.jit(
-        spmd.shard_map(body, mesh=mesh, in_specs=(P(axis_name, None),),
-                       out_specs=(P(axis_name, None), P(axis_name, None)),
+        spmd.shard_map(body, mesh=mesh, in_specs=(P(spec, None),),
+                       out_specs=(P(spec, None), P(spec, None)),
                        check_vma=False)
     )(jnp.asarray(bases))
 

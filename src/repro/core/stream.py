@@ -30,8 +30,8 @@ import numpy as np
 from repro.core import storage
 from repro.core.factions import FactionTable, validate_table
 from repro.core.graph import GenStats
-from repro.core.pba import (PBAConfig, _phase1, _phase2_pool,
-                            default_pair_capacity, occurrence_rank)
+from repro.core.pba import (PBAConfig, _derived_pair_capacity, _phase1,
+                            _phase2_pool, occurrence_rank)
 from repro.core.pk import (PKConfig, SeedGraph, decompose_base, expand_chunk,
                            pk_sizes)
 from repro.runtime import blocking, streaming
@@ -84,8 +84,10 @@ class PBAStream:
         self.num_procs = table.num_procs
         self.num_vertices = self.num_procs * cfg.vertices_per_proc
         self.requested_edges = self.num_procs * cfg.edges_per_proc
-        pair_capacity = cfg.pair_capacity or default_pair_capacity(
-            cfg.edges_per_proc, int(table.s.min()))
+        # Same derivation as the on-device generators, so parity mode
+        # reproduces generate_pba_host at the identical budget.
+        pair_capacity = _derived_pair_capacity(cfg, table)
+        self.pair_capacity = pair_capacity
         self.round_cap = streaming.round_capacity(
             pair_capacity, cfg.exchange_rounds or 1)
 
@@ -290,5 +292,6 @@ def stream_to_shards(stream, out_dir: str,
                      emitted_edges=emitted,
                      dropped_edges=stream.requested_edges - emitted,
                      num_vertices=stream.num_vertices,
-                     exchange_rounds=stream.exchange_rounds)
+                     exchange_rounds=stream.exchange_rounds,
+                     pair_capacity=getattr(stream, "pair_capacity", 0))
     return writer.manifest, stats

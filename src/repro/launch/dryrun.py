@@ -79,13 +79,14 @@ def _param_shardings(rules, model):
 def lower_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
     cfg = get_config(arch_id)
     shape = SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    topo = make_production_mesh(multi_pod=multi_pod)
+    mesh = topo.build_mesh()
     # §Perf Q1: small dense models train fastest with the 'model' axis used
     # as extra data parallelism (TP-16 activation collectives dominate
     # otherwise: 10.7x collective cut on qwen1.5). Requires one sequence
     # per device (else per-device activations overflow — §Perf Q1b) and
     # ZeRO over both axes for the optimizer state. Env-overridable.
-    chips = 512 if multi_pod else 256
+    chips = topo.num_devices
     no_tp_default = (shape.kind == "train" and not cfg.moe
                      and cfg.family != "audio"  # enc-dec: 2 activation stacks
                      and not cfg.ssm_state      # SSD chunk tensors per seq
@@ -178,7 +179,7 @@ def lower_cell(arch_id: str, shape_name: str, multi_pod: bool) -> dict:
     rec = {
         "arch": arch_id,
         "shape": shape_name,
-        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mesh": "x".join(str(s) for s in topo.axis_sizes),
         "kind": shape.kind,
         "compile_seconds": round(compile_s, 2),
         "num_params": model.count_params(),

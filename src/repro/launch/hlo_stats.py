@@ -244,6 +244,69 @@ def collect_collective_stats(hlo: str) -> CollectiveStats:
     return CollectiveStats(top["bytes"], top["count"], ambiguous)
 
 
+_A2A_FIRST_GROUP_RE = re.compile(r"replica_groups=\{\{([\d,\s]+)\}")
+# Iota form: replica_groups=[num_groups,group_size]<=[dims...](T(perm))? —
+# without a transpose the row-major groups are contiguous device ranges;
+# a non-identity transpose interleaves them (strided groups).
+_A2A_IOTA_GROUP_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[[\d,]+\](T\(([\d,]+)\))?")
+
+
+def all_to_all_span_bytes(hlo: str) -> dict:
+    """Static all-to-all byte totals split by replica-group *span*.
+
+    The hierarchical two-hop transpose lowers to two kinds of all-to-all:
+    the intra-pod hop's replica groups are contiguous device ranges
+    (``{{0,1,2,3},{4,5,6,7}}`` — fast local links, like the flat exchange's
+    single full-mesh group), the cross-pod hop's groups are strided
+    (``{{0,4},{1,5},...}`` — the thin cross-pod fabric). Two accountings
+    per span: result bytes (the full exchanged buffer, matching
+    ``collect_collective_stats``) and *wire* bytes — the ``(g-1)/g``
+    fraction of a g-participant all_to_all that actually leaves each
+    device, which is what the cross-pod fabric carries. Returns
+    ``{"local", "cross", "local_wire", "cross_wire", "n_local", "n_cross"}``.
+
+    Counts each instruction once (no while-loop trip multiplication) — use
+    on single-shot exchange programs, which is what the collective gate and
+    the hierarchical-exchange benchmark compile.
+    """
+    out = {"local": 0.0, "cross": 0.0, "local_wire": 0.0, "cross_wire": 0.0,
+           "n_local": 0, "n_cross": 0}
+    for ln in hlo.splitlines():
+        if "/*" in ln:  # strip /*index=N*/ markers inside tuple types
+            ln = _COMMENT_RE.sub("", ln)
+        m = _COLL_LINE_RE.search(ln)
+        if not m or m.group("op") != "all-to-all":
+            continue
+        if m.group("suffix"):
+            sizes = [_array_bytes(f"{dt}[{dims}]") for dt, dims in
+                     _ARRAY_RE.findall(m.group("type"))]
+            b = max(sizes) if sizes else 0
+        else:
+            b = _array_bytes(m.group("type"))
+        gm = _A2A_FIRST_GROUP_RE.search(ln)
+        span, g = "local", 1
+        if gm:
+            members = sorted(int(x) for x in gm.group(1).split(",")
+                             if x.strip())
+            g = max(len(members), 1)
+            if members and members[-1] - members[0] != len(members) - 1:
+                span = "cross"
+        else:
+            im = _A2A_IOTA_GROUP_RE.search(ln)
+            if im:
+                g = max(int(im.group(2)), 1)
+                perm = im.group(4)
+                if perm is not None and [int(x) for x in perm.split(",")
+                                         ] != sorted(
+                                             int(x) for x in perm.split(",")):
+                    span = "cross"
+        out[span] += b
+        out[span + "_wire"] += b * (g - 1) / g
+        out["n_local" if span == "local" else "n_cross"] += 1
+    return out
+
+
 # --------------------------------------------------------------------------
 # Trip-aware FLOPs and HBM-traffic estimates.
 #

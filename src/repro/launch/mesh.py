@@ -1,18 +1,84 @@
-"""Production mesh construction (assignment MULTI-POD DRY-RUN spec).
+"""Production topology construction (assignment MULTI-POD DRY-RUN spec).
 
 A FUNCTION, not a module constant: importing this module never touches jax
 device state. The dry-run forces 512 host devices via XLA_FLAGS before any
 jax import; smoke tests and benches see the real single device.
+
+:func:`make_production_mesh` returns a :class:`~repro.runtime.Topology`
+(call ``.build_mesh()`` for the jax Mesh). When the canonical pod shapes
+(16x16 single-pod, 2x16x16 multi-pod) fit the devices present they are
+kept verbatim — the dry-run deliverable depends on them — otherwise the
+shape adapts to the actual device count and kind (TPU prefers wide model
+axes matched to ICI; hosts/GPUs get a near-square factorization), failing
+with a clear message when the count doesn't factor into a mesh at all.
 """
 from __future__ import annotations
 
+import math
+from typing import Optional
+
 from repro.runtime import spmd
+from repro.runtime.topology import Topology
+
+_POD_CHIPS = 256          # canonical pod: 16 x 16
+_CANON_SINGLE = (16, 16)
+_CANON_MULTI = (2, 16, 16)
+
+# Preferred model-axis widths by device family: TPU ICI rings amortize best
+# at 16-wide tensor parallelism; NVLink islands at 8.
+_MODEL_WIDTHS = {"tpu": (16, 8, 4, 2), "gpu": (8, 4, 2)}
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return spmd.make_mesh(shape, axes, axis_types="auto")
+def _kind_family(kind: str) -> str:
+    k = kind.lower()
+    if "tpu" in k:
+        return "tpu"
+    if any(t in k for t in ("gpu", "cuda", "rocm", "nvidia", "amd")):
+        return "gpu"
+    return "cpu"
+
+
+def _factor2(n: int, kind: str, what: str) -> tuple[int, int]:
+    """(data, model) factorization of ``n`` devices, device-kind-aware."""
+    for w in _MODEL_WIDTHS.get(_kind_family(kind), ()):
+        if n % w == 0 and n // w >= w:
+            return (n // w, w)
+    a = math.isqrt(n)
+    while a > 1 and n % a:
+        a -= 1
+    if a <= 1:
+        if n > 3:
+            raise ValueError(
+                f"{what}: device count {n} ({kind}) is prime — it does not "
+                "factor into a (data, model) mesh; use a composite device "
+                "count or build an explicit Topology")
+        return (1, n)
+    return (n // a, a)
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         num_devices: Optional[int] = None,
+                         device_kind: Optional[str] = None) -> Topology:
+    """Topology for the production train/serve meshes.
+
+    num_devices / device_kind default to the :mod:`repro.runtime.spmd`
+    probes — override for tests or capacity planning.
+    """
+    n = num_devices if num_devices is not None else spmd.device_count()
+    kind = device_kind if device_kind is not None else spmd.device_kind()
+    if multi_pod:
+        if n >= 2 * _POD_CHIPS:
+            return Topology(("pod", "data", "model"), _CANON_MULTI)
+        if n % 2 or n < 4:
+            raise ValueError(
+                f"multi-pod mesh needs an even device count >= 4, have "
+                f"{n} ({kind}); run single-pod or add devices")
+        data, model = _factor2(n // 2, kind, "make_production_mesh")
+        return Topology(("pod", "data", "model"), (2, data, model))
+    if n >= _POD_CHIPS:
+        return Topology(("data", "model"), _CANON_SINGLE)
+    data, model = _factor2(n, kind, "make_production_mesh")
+    return Topology(("data", "model"), (data, model))
 
 
 def make_proc_mesh(num_procs: int = 0, axis_name: str = "proc"):

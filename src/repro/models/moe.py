@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.layers import ParamSpec
+from repro.runtime import spmd
 from repro.sharding.ctx import constrain
 
 
@@ -114,7 +115,7 @@ def _grouped_manual(cfg, p, x, gate_vals, ids_r, pos_r, keep, cap, mesh):
         xb = jax.lax.all_gather(xb, "model", axis=1, tiled=True)
         xb = xb.astype(compute_dtype)
         g = g.astype(compute_dtype)
-        shard = jax.lax.axis_index("model")
+        shard = spmd.axis_index("model")
         local = (ids // e_loc) == shard
         ok = kp & local
         ids_l = jnp.where(ok, ids - shard * e_loc, 0)

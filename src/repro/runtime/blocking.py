@@ -1,36 +1,48 @@
 """Logical-processors-over-devices blocking primitives.
 
 The paper's algorithms are written for P MPI ranks; production runs P
-*logical* processors over D devices (P = lp * D, lp logical procs per
-device). Every distributed code path in the repo blocks its per-logical-proc
-state the same way, so the machinery lives here once:
+*logical* processors over a :class:`~repro.runtime.topology.Topology` of D
+devices (P = lp * D, lp logical procs per device). Every distributed code
+path in the repo blocks its per-logical-proc state the same way, so the
+machinery lives here once:
 
   map_logical        vmap a per-rank body over the device's lp-block
   logical_ranks      the global rank ids owned by this device
+  device_index       this device's linear index in the topology
   transpose_counts   distributed transpose of a logically (P, P) matrix
   transpose_payload  same, with trailing payload dims (P, P, *rest)
   tail_mask/mask_tail  mask entries past a global total in rank-contiguous
                      chunks (the last device's ragged tail)
-  all_reduce_sum     psum across the device axis (identity on host)
+  all_reduce_sum     psum across every topology axis (identity on host)
 
 Blocked-layout contract (shared by every transpose): the global logical
 matrix ``X`` with shape (P, P, *rest) — row q = data *from* logical proc q,
 column r = data *for* logical proc r — is stored device-blocked in rank
-order: device d holds ``X[d*lp:(d+1)*lp]`` as a local (lp, P, *rest) array.
-The transpose returns the same layout of ``X.T`` (swap of the two leading
-logical axes): out[i, q] == X[q, d*lp + i]. Distributed, this is one
-all_to_all of the (lp, d, lp, *rest) re-block — the minimal-communication
-exchange the paper's scalability rests on. On host (``axis_name=None``) the
-device dimension is 1, the full (P, P, *rest) block is local, and the same
-contract degenerates to a plain swapaxes — which is why the sharded and
-host generator paths are bit-identical.
+order: the device with linear index d holds ``X[d*lp:(d+1)*lp]`` as a local
+(lp, P, *rest) array. The transpose returns the same layout of ``X.T``
+(swap of the two leading logical axes): out[i, q] == X[q, d*lp + i].
+
+On a flat 1-D topology this is one all_to_all of the (lp, d, lp, *rest)
+re-block — the minimal-communication exchange the paper's scalability rests
+on. On a 2-D pods topology (r pods x c chips, device d = pod*c + chip) the
+same permutation routes hierarchically in two hops: an all_to_all over the
+*intra-pod* axis delivers every element to its destination chip column, a
+local re-block regroups by destination pod, and an all_to_all over the
+*cross-pod* axis finishes the route — so only the (r-1)/r fraction of the
+block that actually changes pods ever touches the thin cross-pod fabric,
+and it crosses in c-fold aggregated messages instead of the flat
+all_to_all's B/(r*c) crumbs. On host (``Topology.host()``) the device
+dimension is 1, the full (P, P, *rest) block is local, and the same
+contract degenerates to a plain swapaxes — which is why the sharded
+(flat *and* hierarchical) and host generator paths are bit-identical: every
+topology computes the identical permutation of identical values.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
+
+from repro.runtime.topology import Topology
 
 
 def split_logical(num_procs: int, num_devices: int) -> int:
@@ -44,16 +56,29 @@ def split_logical(num_procs: int, num_devices: int) -> int:
     return num_procs // num_devices
 
 
-def logical_ranks(lp: int, axis_name: Optional[str] = None) -> jax.Array:
+def device_index(topo: Topology) -> jax.Array:
+    """This device's linear index in the topology (int32; 0 on host).
+
+    Outer-major over the topology axes — pods(r, c) gives
+    ``axis_index(pod) * c + axis_index(proc)``, matching the row-major
+    device order of :meth:`Topology.build_mesh` and the blocked layout.
+    """
+    idx = jnp.int32(0)
+    for name, size in zip(topo.axis_names, topo.axis_sizes):
+        idx = idx * jnp.int32(size) + jax.lax.axis_index(name)
+    return idx
+
+
+def logical_ranks(lp: int, topo: Topology) -> jax.Array:
     """Global logical-proc ids owned by this device: (lp,) int32.
 
-    Inside a shard_map body the device index offsets the block; on host
-    (axis_name=None) the single "device" owns ranks [0, lp).
+    Inside a shard_map body the device's linear index offsets the block; on
+    host the single "device" owns ranks [0, lp).
     """
     ranks = jnp.arange(lp, dtype=jnp.int32)
-    if axis_name is None:
+    if topo.is_host:
         return ranks
-    return jax.lax.axis_index(axis_name) * lp + ranks
+    return device_index(topo) * lp + ranks
 
 
 def map_logical(fn, ranks: jax.Array, *args):
@@ -65,37 +90,58 @@ def map_logical(fn, ranks: jax.Array, *args):
     return jax.vmap(fn)(ranks, *args)
 
 
-def _transpose_blocked(x: jax.Array, axis_name: Optional[str],
-                       num_devices: int) -> jax.Array:
+def _transpose_blocked(x: jax.Array, topo: Topology) -> jax.Array:
     """Core (lp, P, *rest) -> (lp, P, *rest) distributed transpose."""
     lp, p = int(x.shape[0]), int(x.shape[1])
     rest = x.shape[2:]
-    if axis_name is None:
-        if num_devices != 1:
-            raise ValueError(
-                "axis_name=None is the single-device path (num_devices=1); "
-                f"got num_devices={num_devices}")
+    if topo.is_host:
         if lp != p:
             raise ValueError(
-                f"single-device transpose needs the full (P, P) block, got "
+                f"host transpose needs the full (P, P) block, got "
                 f"({lp}, {p})")
         return jnp.swapaxes(x, 0, 1)
-    if p != lp * num_devices:
+    d = topo.num_devices
+    if p != lp * d:
         raise ValueError(
-            f"blocked shape ({lp}, {p}) inconsistent with "
-            f"{num_devices} devices (expect P = lp * D = {lp * num_devices})")
-    # (lp, d, lp, *rest): [my_lp, dst_dev, dst_lp]; the all_to_all scatters
-    # the dst_dev slabs and concatenates the received src_dev slabs in front.
-    blocked = x.reshape((lp, num_devices, lp) + rest)
-    recv = jax.lax.all_to_all(blocked, axis_name, split_axis=1,
-                              concat_axis=0, tiled=False)
-    # recv: (d, lp, lp, *rest): [src_dev, src_lp, my_lp] — regroup rows per
-    # local logical proc.
-    return jnp.moveaxis(recv, 2, 0).reshape((lp, p) + rest)
+            f"blocked shape ({lp}, {p}) inconsistent with topology "
+            f"{topo.label} (expect P = lp * D = {lp * d})")
+    if topo.ndim == 1:
+        axis_name = topo.axis_names[0]
+        # (lp, d, lp, *rest): [my_lp, dst_dev, dst_lp]; the all_to_all
+        # scatters the dst_dev slabs and concatenates the received src_dev
+        # slabs in front.
+        blocked = x.reshape((lp, d, lp) + rest)
+        recv = jax.lax.all_to_all(blocked, axis_name, split_axis=1,
+                                  concat_axis=0, tiled=False)
+        # recv: (d, lp, lp, *rest): [src_dev, src_lp, my_lp] — regroup rows
+        # per local logical proc.
+        return jnp.moveaxis(recv, 2, 0).reshape((lp, p) + rest)
+    if topo.ndim == 2:
+        cross, intra = topo.axis_names
+        r, c = topo.axis_sizes
+        # Column index decomposes pod-major: q' = (r'*c + c')*lp + i'.
+        blocked = x.reshape((lp, r, c, lp) + rest)   # [my_lp, r', c', i']
+        # Hop 1 — intra-pod: deliver every element to its destination chip
+        # *column* (same pod for now). Bulk bytes move over fast local links.
+        hop1 = jax.lax.all_to_all(blocked, intra, split_axis=2,
+                                  concat_axis=0, tiled=False)
+        # hop1: (c, lp, r, lp, *rest): [src_chip, src_lp, r', i'] — the
+        # local re-block is implicit: the next split axis is now the
+        # destination pod.
+        # Hop 2 — cross-pod: only the pod-changing fraction crosses the thin
+        # fabric, aggregated into c-fold larger messages than a flat
+        # all_to_all would send.
+        hop2 = jax.lax.all_to_all(hop1, cross, split_axis=2,
+                                  concat_axis=0, tiled=False)
+        # hop2: (r, c, lp, lp, *rest): [src_pod, src_chip, src_lp, my_lp] —
+        # leading three axes are exactly the global source rank q.
+        return jnp.moveaxis(hop2, 3, 0).reshape((lp, p) + rest)
+    raise NotImplementedError(
+        f"distributed transpose supports 1-D and 2-D topologies, got "
+        f"{topo.ndim}-D {topo.label}")
 
 
-def transpose_counts(counts: jax.Array, axis_name: Optional[str],
-                     num_devices: int) -> jax.Array:
+def transpose_counts(counts: jax.Array, topo: Topology) -> jax.Array:
     """Transpose a logically (P, P) counts matrix, device-blocked (lp, P).
 
     counts[i, q] = "my logical proc i sends this many to q"; returns
@@ -104,11 +150,10 @@ def transpose_counts(counts: jax.Array, axis_name: Optional[str],
     """
     if counts.ndim != 2:
         raise ValueError(f"counts must be (lp, P), got {counts.shape}")
-    return _transpose_blocked(counts, axis_name, num_devices)
+    return _transpose_blocked(counts, topo)
 
 
-def transpose_payload(buf: jax.Array, axis_name: Optional[str],
-                      num_devices: int) -> jax.Array:
+def transpose_payload(buf: jax.Array, topo: Topology) -> jax.Array:
     """Transpose a logically (P, P, *payload) buffer, blocked (lp, P, *payload).
 
     buf[i, q, ...] = payload my logical proc i produced for q; returns
@@ -119,7 +164,7 @@ def transpose_payload(buf: jax.Array, axis_name: Optional[str],
         raise ValueError(
             f"payload must be (lp, P, *payload) with >=1 payload dim, got "
             f"{buf.shape}")
-    return _transpose_blocked(buf, axis_name, num_devices)
+    return _transpose_blocked(buf, topo)
 
 
 def tail_mask(rank, chunk: int, total: int) -> jax.Array:
@@ -142,8 +187,8 @@ def mask_tail(arrays, rank, chunk: int, total: int, fill=-1):
     return tuple(jnp.where(live, a, fill) for a in arrays)
 
 
-def all_reduce_sum(x, axis_name: Optional[str]):
-    """psum across the device axis; identity on the host path (None)."""
-    if axis_name is None:
+def all_reduce_sum(x, topo: Topology):
+    """psum across every topology axis; identity on the host path."""
+    if topo.is_host:
         return x
-    return jax.lax.psum(x, axis_name)
+    return jax.lax.psum(x, topo.psum_axes)

@@ -134,6 +134,46 @@ def cost_analysis(compiled) -> dict:
     return cost or {}
 
 
+def axis_index(axis_name) -> Any:
+    """``jax.lax.axis_index`` gateway (raw spelling is banned outside
+    ``repro.runtime`` by the API-hygiene grep gate, alongside raw
+    all_to_all — collective addressing goes through the runtime layer)."""
+    return jax.lax.axis_index(axis_name)
+
+
+def device_count() -> int:
+    """How many devices the backend exposes."""
+    return len(jax.devices())
+
+
+def device_kind() -> str:
+    """Kind string of device 0 (e.g. 'cpu', 'TPU v4', 'NVIDIA H100')."""
+    return str(jax.devices()[0].device_kind)
+
+
+_DEFAULT_DEVICE_MEMORY = 8 << 30  # conservative HBM guess when unprobeable
+
+
+def device_memory_bytes(default: int = _DEFAULT_DEVICE_MEMORY) -> int:
+    """Per-device memory budget in bytes.
+
+    Accelerators report ``bytes_limit`` via ``memory_stats()``; host/CPU
+    devices usually report nothing, so a fixed conservative default keeps
+    derived values (e.g. the pair-capacity heuristic) deterministic across
+    processes — required for host/sharded bit-parity.
+    """
+    dev = jax.devices()[0]
+    try:
+        stats = dev.memory_stats()
+    except Exception:  # backend offers no stats
+        stats = None
+    if stats:
+        for key in ("bytes_limit", "bytes_reservable_limit"):
+            if stats.get(key):
+                return int(stats[key])
+    return default
+
+
 def make_proc_mesh(num_procs: int = 0, axis_name: str = "proc",
                    devices=None) -> Mesh:
     """1-D mesh over all (or exactly the first ``num_procs``) devices.

@@ -19,27 +19,31 @@ Round/residual invariants (the streaming contract):
   s_r(c) == 0  for  r >= ceil(c / C_r) - 1       rounds terminate
 
 Rounds run under one ``lax.while_loop`` whose continuation predicate is the
-*globally all-reduced* residual, so every device computes the identical trip
-count and the collective inside the loop body stays uniform across the mesh.
-On the host path (``axis_name=None``) the transpose degenerates to a local
+*globally all-reduced* residual — reduced over every axis of the
+:class:`~repro.runtime.topology.Topology`, so on a 2-D pods mesh all
+r x c devices compute the identical trip count and both hops of the
+hierarchical transpose inside the loop body stay uniform across the mesh.
+On the host path (``Topology.host()``) the transpose degenerates to a local
 swapaxes and the all-reduce to identity, so the host and sharded runs of the
 same logical program execute the same rounds on the same values — the
 bit-parity argument of ``blocking.py`` extends to the streamed exchange by
 construction.
 
 Blocked-layout extension: everything here is expressed through
-``blocking.transpose_payload`` / ``blocking.all_reduce_sum``, so a future
-2-D-mesh (hierarchical all_to_all) transpose upgrades the streaming path for
-free — the round/residual logic never looks at the device axis.
+``blocking.transpose_payload`` / ``blocking.all_reduce_sum``, so the 2-D
+hierarchical transpose upgraded the streaming path for free — the
+round/residual logic never looks at the device axes; it just hands the
+topology through.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.runtime import blocking
+from repro.runtime.topology import Topology
 
 
 def round_capacity(total_capacity: int, num_rounds: int) -> int:
@@ -83,7 +87,7 @@ def residual_counts(counts: jax.Array, r, round_cap: int) -> jax.Array:
 def run_exchange(counts: jax.Array, round_cap: int, max_rounds: int,
                  emit: Callable[[jax.Array], jax.Array],
                  consume: Callable[[jax.Array, jax.Array, object], object],
-                 init_carry, axis_name: Optional[str], num_devices: int):
+                 init_carry, topo: Topology):
     """Run the multi-round streamed exchange; returns (carry, rounds_run).
 
     counts: (lp, P) int32 — per-pair items that will actually ship (demand,
@@ -105,7 +109,7 @@ def run_exchange(counts: jax.Array, round_cap: int, max_rounds: int,
     static ``max_rounds``.
     """
     owed0 = blocking.all_reduce_sum(
-        jnp.sum(counts, dtype=jnp.int32), axis_name)
+        jnp.sum(counts, dtype=jnp.int32), topo)
 
     def cond(state):
         r, _, owed = state
@@ -113,11 +117,11 @@ def run_exchange(counts: jax.Array, round_cap: int, max_rounds: int,
 
     def body(state):
         r, carry, _ = state
-        recv = blocking.transpose_payload(emit(r), axis_name, num_devices)
+        recv = blocking.transpose_payload(emit(r), topo)
         carry = consume(r, recv, carry)
         owed = blocking.all_reduce_sum(
             jnp.sum(residual_counts(counts, r, round_cap), dtype=jnp.int32),
-            axis_name)
+            topo)
         return r + 1, carry, owed
 
     rounds, carry, _ = jax.lax.while_loop(

@@ -1,0 +1,155 @@
+"""Explicit device-topology abstraction for the exchange layer.
+
+The paper's algorithms are written for P MPI ranks over a flat network; at
+pod scale the physical network is hierarchical — chips inside a pod talk
+over fast local links, pods talk over a much thinner cross-pod fabric. A
+:class:`Topology` names the mesh axes the exchange runs over and their
+sizes, replacing the ad-hoc ``(axis_name, num_devices)`` pairs the blocking
+primitives used to take:
+
+  Topology.host()        no device axis — the full logical program on one
+                         device (transposes degenerate to local swapaxes)
+  Topology.flat(d)       one ``proc`` axis of d devices — today's single
+                         all_to_all exchange, reproduced bit-for-bit
+  Topology.pods(r, c)    r pods x c chips per pod — the distributed
+                         transpose becomes a hierarchical two-hop exchange
+                         (all_to_all over the intra-pod axis, local
+                         re-block, all_to_all over the cross-pod axis)
+
+The logical-over-physical factorization P = lp * D is captured by
+:meth:`lp`: D = ``num_devices`` is the product of the axis sizes, and a
+device's linear index (pod-major: ``axis_index(pod) * c + axis_index(proc)``)
+selects its lp-block of logical ranks. Everything downstream — blocked
+layouts, partition specs, psum axes — derives from the one dataclass, so a
+topology threads through shard_map closures as plain static metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+from jax.sharding import Mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Mesh axes the distributed exchange runs over.
+
+    axis_names / axis_sizes: parallel tuples, outermost (slowest/cross-pod)
+    axis first. Empty tuples describe the host path (no device axis).
+    """
+
+    axis_names: Tuple[str, ...]
+    axis_sizes: Tuple[int, ...]
+
+    def __post_init__(self):
+        names = tuple(self.axis_names)
+        sizes = tuple(int(s) for s in self.axis_sizes)
+        object.__setattr__(self, "axis_names", names)
+        object.__setattr__(self, "axis_sizes", sizes)
+        if len(names) != len(sizes):
+            raise ValueError(
+                f"axis_names {names} and axis_sizes {sizes} length mismatch")
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate axis names in {names}")
+        if any(s < 1 for s in sizes):
+            raise ValueError(f"axis sizes must be >= 1, got {sizes}")
+
+    # --- constructors -------------------------------------------------------
+
+    @classmethod
+    def host(cls) -> "Topology":
+        """No device axis: the whole logical program runs on one device."""
+        return cls((), ())
+
+    @classmethod
+    def flat(cls, num_devices: int, axis_name: str = "proc") -> "Topology":
+        """One flat device axis — the legacy single-all_to_all exchange."""
+        return cls((axis_name,), (num_devices,))
+
+    @classmethod
+    def pods(cls, rows: int, cols: int, cross_axis: str = "pod",
+             intra_axis: str = "proc") -> "Topology":
+        """``rows`` pods x ``cols`` chips per pod (2-D hierarchical mesh).
+
+        The cross-pod axis is outermost: device linear index =
+        pod * cols + chip, so logical ranks stay pod-contiguous.
+        """
+        if rows < 1 or cols < 1:
+            raise ValueError(f"pods({rows}, {cols}): both sizes must be >= 1")
+        return cls((cross_axis, intra_axis), (rows, cols))
+
+    @classmethod
+    def from_mesh(cls, mesh: Mesh) -> "Topology":
+        """The topology a mesh's axes describe (same order/sizes)."""
+        return cls(tuple(mesh.axis_names),
+                   tuple(int(mesh.shape[n]) for n in mesh.axis_names))
+
+    # --- derived ------------------------------------------------------------
+
+    @property
+    def ndim(self) -> int:
+        return len(self.axis_names)
+
+    @property
+    def is_host(self) -> bool:
+        return self.ndim == 0
+
+    @property
+    def num_devices(self) -> int:
+        return int(math.prod(self.axis_sizes)) if self.axis_sizes else 1
+
+    @property
+    def spec_axes(self):
+        """The leading PartitionSpec entry that shards rank-blocked arrays:
+        None (host), the axis name (1-D), or the tuple of names (multi-axis,
+        outer-major — matching the linear device index)."""
+        if self.is_host:
+            return None
+        if self.ndim == 1:
+            return self.axis_names[0]
+        return self.axis_names
+
+    @property
+    def psum_axes(self):
+        """Axis-name argument for a full all-reduce; None on host."""
+        if self.is_host:
+            return None
+        return self.axis_names if self.ndim > 1 else self.axis_names[0]
+
+    def lp(self, num_procs: int) -> int:
+        """Logical procs per device: P / D, validating divisibility."""
+        d = self.num_devices
+        if num_procs % d:
+            raise ValueError(
+                f"logical procs {num_procs} must divide over the "
+                f"{d}-device topology {self.label}")
+        return num_procs // d
+
+    @property
+    def label(self) -> str:
+        """Stable human/baseline key: 'host', 'flat_1x8', 'pods_2x4', ..."""
+        if self.is_host:
+            return "host"
+        if self.ndim == 1:
+            return f"flat_1x{self.axis_sizes[0]}"
+        return "pods_" + "x".join(str(s) for s in self.axis_sizes)
+
+    def build_mesh(self, devices: Optional[Sequence] = None) -> Mesh:
+        """A Mesh with these axes over the first ``num_devices`` devices.
+
+        Row-major device assignment, so the linear device index of the
+        blocked-layout contract equals the position in ``devices``.
+        """
+        if self.is_host:
+            raise ValueError("host topology has no device mesh")
+        import jax
+        devs = list(jax.devices()) if devices is None else list(devices)
+        n = self.num_devices
+        if len(devs) < n:
+            raise ValueError(
+                f"topology {self.label} needs {n} devices, have {len(devs)}")
+        return Mesh(np.array(devs[:n]).reshape(self.axis_sizes),
+                    self.axis_names)

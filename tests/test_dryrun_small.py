@@ -70,18 +70,22 @@ def test_collectives_with_loop_multiplier_8dev():
 def test_dryrun_cell_on_small_mesh():
     """Exercise the full lower_cell path with a patched 2x4 mesh + tiny arch."""
     run_with_devices("""
-        import dataclasses, jax, jax.numpy as jnp
+        import dataclasses, os, jax, jax.numpy as jnp
         import repro.launch.dryrun as dr
         import repro.launch.mesh as mesh_mod
         from repro.configs import get_config, SHAPES
         import repro.configs.registry as reg
 
-        from repro.runtime import spmd
+        from repro.runtime import Topology
+
+        # keep the TP lowering path of the 256-chip heuristic on this tiny
+        # mesh (chips is now topology-derived, which would flip no_tp here)
+        os.environ["REPRO_NO_TP"] = "0"
 
         def small_mesh(*, multi_pod=False):
-            shape = (2, 2, 2) if multi_pod else (2, 4)
-            axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-            return spmd.make_mesh(shape, axes, axis_types="auto")
+            return Topology(
+                ("pod", "data", "model") if multi_pod else ("data", "model"),
+                (2, 2, 2) if multi_pod else (2, 4))
         dr.make_production_mesh = small_mesh
         dr.TP = 4
 

@@ -12,7 +12,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.runtime import blocking, spmd
+from repro.runtime import Topology, blocking, spmd
 
 from helpers import run_with_devices
 
@@ -22,15 +22,22 @@ SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
 # --- API hygiene ------------------------------------------------------------
 
 def test_no_raw_shard_map_outside_runtime():
-    """Only src/repro/runtime/ may reference the raw version-drifting APIs."""
+    """Only src/repro/runtime/ may reference the raw version-drifting APIs
+    and the raw collective-addressing APIs (all_to_all / axis_index)."""
     raw = re.compile(
         r"jax\s*\.\s*(experimental\s*\.\s*)?shard_map"
         r"|jax\s*\.\s*make_mesh"
         r"|jax\.sharding\.AxisType"
+        # collective addressing is the runtime layer's job: a raw
+        # all_to_all/axis_index call sidesteps the Topology contract
+        r"|jax\s*\.\s*lax\s*\.\s*all_to_all"
+        r"|jax\s*\.\s*lax\s*\.\s*axis_index"
+        r"|\blax\s*\.\s*(all_to_all|axis_index)\s*\("
         # from-import spellings of the same drifting APIs
         r"|from\s+jax(\.experimental(\.shard_map)?)?\s+import\s+[^\n]*"
         r"\bshard_map\b"
         r"|from\s+jax\s+import\s+[^\n]*\bmake_mesh\b"
+        r"|from\s+jax\.lax\s+import\s+[^\n]*\b(all_to_all|axis_index)\b"
         r"|from\s+jax\.sharding\s+import\s+[^\n]*\bAxisType\b")
     offenders = []
     for path in sorted(SRC.rglob("*.py")):
@@ -41,8 +48,8 @@ def test_no_raw_shard_map_outside_runtime():
             if raw.search(line):
                 offenders.append(f"{rel}:{lineno}: {line.strip()}")
     assert not offenders, (
-        "raw shard_map/mesh APIs outside repro.runtime (route through "
-        "repro.runtime.spmd):\n" + "\n".join(offenders))
+        "raw shard_map/mesh/collective APIs outside repro.runtime (route "
+        "through repro.runtime.spmd / blocking):\n" + "\n".join(offenders))
 
 
 def test_api_info_resolved():
@@ -102,7 +109,95 @@ def test_dp_sync_rejects_wrong_leading_dim():
         dp_sync({"w": jnp.zeros((3, 4), jnp.float32)})
 
 
+# --- Topology ---------------------------------------------------------------
+
+def test_topology_constructors_and_derived():
+    host = Topology.host()
+    assert host.is_host and host.num_devices == 1 and host.ndim == 0
+    assert host.spec_axes is None and host.psum_axes is None
+    assert host.label == "host"
+
+    flat = Topology.flat(8)
+    assert flat.axis_names == ("proc",) and flat.axis_sizes == (8,)
+    assert flat.num_devices == 8 and flat.spec_axes == "proc"
+    assert flat.psum_axes == "proc" and flat.label == "flat_1x8"
+    assert flat.lp(1000) == 125
+
+    pods = Topology.pods(2, 4)
+    assert pods.axis_names == ("pod", "proc")
+    assert pods.num_devices == 8 and pods.label == "pods_2x4"
+    assert pods.spec_axes == ("pod", "proc")
+    assert pods.psum_axes == ("pod", "proc")
+    assert pods.lp(16) == 2
+
+    with pytest.raises(ValueError):  # P must divide over D
+        pods.lp(10)
+    with pytest.raises(ValueError):
+        Topology.pods(0, 4)
+    with pytest.raises(ValueError):  # duplicate axis names
+        Topology(("proc", "proc"), (2, 2))
+    with pytest.raises(ValueError):  # names/sizes length mismatch
+        Topology(("a",), (2, 2))
+    with pytest.raises(ValueError):  # host has no device mesh
+        host.build_mesh()
+
+
+def test_topology_mesh_roundtrip():
+    flat = Topology.flat(1)
+    mesh = flat.build_mesh()
+    assert mesh.axis_names == ("proc",)
+    assert Topology.from_mesh(mesh) == flat
+    with pytest.raises(ValueError):  # more devices than exist
+        Topology.pods(64, 64).build_mesh()
+
+
+def test_make_production_mesh_device_aware():
+    from repro.launch.mesh import make_production_mesh
+    # canonical pod shapes preserved when the devices exist
+    assert make_production_mesh(num_devices=512, device_kind="cpu"
+                                ).axis_sizes == (16, 16)
+    assert make_production_mesh(multi_pod=True, num_devices=512,
+                                device_kind="cpu").axis_sizes == (2, 16, 16)
+    # device-count-aware adaptation below a pod
+    t = make_production_mesh(num_devices=8, device_kind="cpu")
+    assert t.axis_names == ("data", "model") and t.num_devices == 8
+    mp = make_production_mesh(multi_pod=True, num_devices=8,
+                              device_kind="cpu")
+    assert mp.axis_sizes[0] == 2 and mp.num_devices == 8
+    # device-kind-aware: TPU prefers a 16-wide model axis
+    assert make_production_mesh(num_devices=64,
+                                device_kind="TPU v4").axis_sizes[1] >= 8
+    # clear failures when the count doesn't factor
+    with pytest.raises(ValueError, match="prime"):
+        make_production_mesh(num_devices=7, device_kind="cpu")
+    with pytest.raises(ValueError, match="multi-pod"):
+        make_production_mesh(multi_pod=True, num_devices=7,
+                             device_kind="cpu")
+
+
+def test_default_pair_capacity_memory_and_latency_aware():
+    from repro.core.pba import default_pair_capacity
+    # small scale: the load heuristic is unchanged by the new terms
+    assert default_pair_capacity(600, 2) == 600
+    assert default_pair_capacity(600, 2, num_procs=8) == 600
+    # pod scale: the (P, C_r) buffer must fit 1/16 of device memory
+    tight = default_pair_capacity(10**6, 1, num_procs=1000,
+                                  memory_bytes=64 << 20)
+    assert tight == (64 << 20) // 16 // (4 * 1000)
+    # streamed runs recover clamped capacity via rounds: C scales with R
+    r4 = default_pair_capacity(10**6, 1, num_procs=1000, exchange_rounds=4,
+                               memory_bytes=64 << 20)
+    assert r4 == 4 * tight
+    # latency floor: never below 16 slots per round
+    assert default_pair_capacity(10**6, 1, num_procs=10**6,
+                                 exchange_rounds=2,
+                                 memory_bytes=1 << 20) == 32
+
+
 # --- blocking primitives, host path ----------------------------------------
+
+HOST = Topology.host()
+
 
 def test_transpose_host_matches_numpy():
     rng = np.random.default_rng(0)
@@ -110,23 +205,27 @@ def test_transpose_host_matches_numpy():
     counts = jnp.asarray(rng.integers(0, 50, (p, p)).astype(np.int32))
     buf = jnp.asarray(rng.integers(0, 50, (p, p, c)).astype(np.int32))
     np.testing.assert_array_equal(
-        np.asarray(blocking.transpose_counts(counts, None, 1)),
+        np.asarray(blocking.transpose_counts(counts, HOST)),
         np.asarray(counts).T)
     np.testing.assert_array_equal(
-        np.asarray(blocking.transpose_payload(buf, None, 1)),
+        np.asarray(blocking.transpose_payload(buf, HOST)),
         np.swapaxes(np.asarray(buf), 0, 1))
 
 
 def test_transpose_shape_contracts():
     x = jnp.zeros((2, 8), jnp.int32)
     with pytest.raises(ValueError):  # host path needs the full (P, P) block
-        blocking.transpose_counts(x, None, 1)
+        blocking.transpose_counts(x, HOST)
     with pytest.raises(ValueError):  # blocked shape inconsistent with D
-        blocking.transpose_counts(x, "proc", 3)
+        blocking.transpose_counts(x, Topology.flat(3))
     with pytest.raises(ValueError):  # counts must be 2-D
-        blocking.transpose_counts(jnp.zeros((2, 2, 2), jnp.int32), None, 1)
+        blocking.transpose_counts(jnp.zeros((2, 2, 2), jnp.int32), HOST)
     with pytest.raises(ValueError):  # payload needs a payload dim
-        blocking.transpose_payload(jnp.zeros((2, 2), jnp.int32), None, 1)
+        blocking.transpose_payload(jnp.zeros((2, 2), jnp.int32), HOST)
+    with pytest.raises(NotImplementedError):  # >2-D topologies unsupported
+        blocking.transpose_counts(
+            jnp.zeros((1, 8), jnp.int32), Topology(("a", "b", "c"),
+                                                   (2, 2, 2)))
     with pytest.raises(ValueError):
         blocking.split_logical(10, 4)
     assert blocking.split_logical(12, 4) == 3
@@ -141,12 +240,13 @@ def test_tail_mask_and_mask_tail():
 
 
 def test_map_logical_and_ranks_host():
-    ranks = blocking.logical_ranks(4, axis_name=None)
+    ranks = blocking.logical_ranks(4, HOST)
     np.testing.assert_array_equal(np.asarray(ranks), [0, 1, 2, 3])
     rows = jnp.arange(8, dtype=jnp.int32).reshape(4, 2)
     out = blocking.map_logical(lambda r, row: r + row.sum(), ranks, rows)
     np.testing.assert_array_equal(np.asarray(out), [1, 6, 11, 16])
-    assert blocking.all_reduce_sum(jnp.int32(5), None) == 5
+    assert blocking.all_reduce_sum(jnp.int32(5), HOST) == 5
+    assert int(blocking.device_index(HOST)) == 0
 
 
 def test_pba_sharded_parity_one_device():
@@ -171,16 +271,17 @@ def test_transpose_distributed_matches_host(devices):
     run_with_devices(f"""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
-        from repro.runtime import blocking, spmd
+        from repro.runtime import Topology, blocking, spmd
         d, lp, c = {devices}, 2, 3
         p = d * lp
-        mesh = spmd.make_proc_mesh(d)
+        topo = Topology.flat(d)
+        mesh = topo.build_mesh()
         rng = np.random.default_rng(0)
         counts = jnp.asarray(rng.integers(0, 100, (p, p)).astype(np.int32))
         buf = jnp.asarray(rng.integers(0, 100, (p, p, c)).astype(np.int32))
         def body(cb, bb):
-            return (blocking.transpose_counts(cb, "proc", d),
-                    blocking.transpose_payload(bb, "proc", d))
+            return (blocking.transpose_counts(cb, topo),
+                    blocking.transpose_payload(bb, topo))
         ct, bt = jax.jit(spmd.shard_map(
             body, mesh=mesh, in_specs=(P("proc"), P("proc")),
             out_specs=(P("proc"), P("proc")), check_vma=False))(counts, buf)
@@ -189,6 +290,66 @@ def test_transpose_distributed_matches_host(devices):
                                       np.swapaxes(np.asarray(buf), 0, 1))
         print("OK")
     """, devices)
+
+
+@pytest.mark.parametrize("rows,cols", [(2, 4), (4, 2)])
+def test_transpose_hierarchical_matches_host(rows, cols):
+    """The 2-D two-hop transpose is the same permutation as a flat one."""
+    run_with_devices(f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.runtime import Topology, blocking, spmd
+        topo = Topology.pods({rows}, {cols})
+        d, lp, c = topo.num_devices, 3, 2
+        p = d * lp
+        mesh = topo.build_mesh()
+        spec = topo.spec_axes
+        rng = np.random.default_rng(1)
+        counts = jnp.asarray(rng.integers(0, 100, (p, p)).astype(np.int32))
+        buf = jnp.asarray(rng.integers(0, 100, (p, p, c)).astype(np.int32))
+        def body(cb, bb):
+            ranks = blocking.logical_ranks(lp, topo)
+            return (blocking.transpose_counts(cb, topo),
+                    blocking.transpose_payload(bb, topo), ranks)
+        ct, bt, ranks = jax.jit(spmd.shard_map(
+            body, mesh=mesh, in_specs=(P(spec), P(spec)),
+            out_specs=(P(spec), P(spec), P(spec)), check_vma=False))(
+            counts, buf)
+        np.testing.assert_array_equal(np.asarray(ct), np.asarray(counts).T)
+        np.testing.assert_array_equal(np.asarray(bt),
+                                      np.swapaxes(np.asarray(buf), 0, 1))
+        # pod-major linear device index => globally contiguous rank order
+        np.testing.assert_array_equal(np.asarray(ranks), np.arange(p))
+        print("OK")
+    """, rows * cols)
+
+
+def test_pba_parity_matrix_8dev():
+    """flat 1x8, pods 2x4 / 4x2, and host: all bit-identical (single-shot),
+    for both generate_pba (1 proc/device) and generate_pba_sharded."""
+    run_with_devices("""
+        import numpy as np
+        from repro.core import FactionSpec, PBAConfig, make_factions
+        from repro.core.pba import (generate_pba, generate_pba_host,
+                                    generate_pba_sharded)
+        from repro.runtime import Topology
+        table = make_factions(8, FactionSpec(4, 2, 4, seed=2))
+        cfg = PBAConfig(vertices_per_proc=100, edges_per_vertex=3, seed=5)
+        e_h, st_h = generate_pba_host(cfg, table)
+        rs = np.asarray(e_h.src).reshape(-1)
+        rd = np.asarray(e_h.dst).reshape(-1)
+        for topo in (Topology.flat(8), Topology.pods(2, 4),
+                     Topology.pods(4, 2)):
+            for gen in (generate_pba_sharded, generate_pba):
+                e, st = gen(cfg, table, topology=topo)
+                np.testing.assert_array_equal(
+                    np.asarray(e.src).reshape(-1), rs, err_msg=topo.label)
+                np.testing.assert_array_equal(
+                    np.asarray(e.dst).reshape(-1), rd, err_msg=topo.label)
+                assert st.dropped_edges == st_h.dropped_edges
+                assert st.pair_capacity == st_h.pair_capacity > 0
+        print("OK")
+    """, 8)
 
 
 def test_pba_sharded_parity_2dev():
@@ -216,10 +377,10 @@ def test_shim_runs_on_8dev():
     run_with_devices("""
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
-        from repro.runtime import blocking, spmd
+        from repro.runtime import Topology, blocking, spmd
         mesh = spmd.make_proc_mesh(8)
         def body(x):
-            return blocking.all_reduce_sum(x.sum(), "proc")[None]
+            return blocking.all_reduce_sum(x.sum(), Topology.flat(8))[None]
         out = jax.jit(spmd.shard_map(
             body, mesh=mesh, in_specs=(P("proc"),), out_specs=P("proc"),
             check_vma=False))(jnp.arange(16, dtype=jnp.int32))

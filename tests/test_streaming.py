@@ -102,22 +102,34 @@ def test_streaming_rounds1_bit_matches_legacy_when_no_overflow():
 
 @pytest.mark.parametrize("num_devices", [1, 2, 8])
 def test_streaming_sharded_matches_host(num_devices):
+    """Host == sharded bit-parity for the streamed exchange; on 8 devices
+    the full topology matrix (flat 1x8, hierarchical 2x4 and 4x2) must be
+    bit-identical too."""
     run_with_devices(f"""
         import numpy as np
         from repro.core import (PBAConfig, generate_pba_host,
                                 generate_pba_sharded, hub_factions)
+        from repro.runtime import Topology
         table = hub_factions(8)
         cfg = PBAConfig(vertices_per_proc=150, edges_per_vertex=3, seed=5,
                         pair_capacity=16, total_capacity_factor=8,
                         exchange_rounds=4)
-        e_s, st_s = generate_pba_sharded(cfg, table)
         e_h, st_h = generate_pba_host(cfg, table)
-        np.testing.assert_array_equal(np.asarray(e_s.src).reshape(-1),
-                                      np.asarray(e_h.src).reshape(-1))
-        np.testing.assert_array_equal(np.asarray(e_s.dst).reshape(-1),
-                                      np.asarray(e_h.dst).reshape(-1))
-        assert st_s.dropped_edges == st_h.dropped_edges == 0, (st_s, st_h)
-        assert st_s.exchange_rounds == st_h.exchange_rounds, (st_s, st_h)
+        topos = [Topology.flat({num_devices})]
+        if {num_devices} == 8:
+            topos += [Topology.pods(2, 4), Topology.pods(4, 2)]
+        for topo in topos:
+            e_s, st_s = generate_pba_sharded(cfg, table, topology=topo)
+            np.testing.assert_array_equal(np.asarray(e_s.src).reshape(-1),
+                                          np.asarray(e_h.src).reshape(-1),
+                                          err_msg=topo.label)
+            np.testing.assert_array_equal(np.asarray(e_s.dst).reshape(-1),
+                                          np.asarray(e_h.dst).reshape(-1),
+                                          err_msg=topo.label)
+            assert st_s.dropped_edges == st_h.dropped_edges == 0, \\
+                (topo.label, st_s, st_h)
+            assert st_s.exchange_rounds == st_h.exchange_rounds, \\
+                (topo.label, st_s, st_h)
         print("OK")
     """, num_devices)
 

@@ -58,12 +58,13 @@ def test_pba_exactly_two_exchanges():
         table = make_factions(procs, FactionSpec(4, 2, 4, seed=1))
         cfg = PBAConfig(vertices_per_proc=200, edges_per_vertex=3, seed=7,
                         pair_capacity=256)
-        from repro.runtime import spmd
-        mesh = spmd.make_proc_mesh()
+        from repro.runtime import Topology, blocking, spmd
+        topo = Topology.flat(procs)
+        mesh = topo.build_mesh()
         def body(procs_blk, s_blk):
-            rank = jax.lax.axis_index("proc")
+            rank = blocking.device_index(topo)
             u, v, dropped, granted = pba_shard_body(
-                rank, procs_blk[0], s_blk[0], cfg, procs, 256, "proc")
+                rank, procs_blk[0], s_blk[0], cfg, procs, 256, topo)
             return u[None], v[None]
         f = jax.jit(spmd.shard_map(
             body, mesh=mesh,
@@ -73,6 +74,45 @@ def test_pba_exactly_two_exchanges():
                       jnp.asarray(table.s)).compile().as_text()
         n_a2a = len(re.findall(r" all-to-all\\(", hlo))
         assert n_a2a == 2, f"expected exactly 2 all_to_alls, got {n_a2a}"
+        print("OK")
+    """, 8)
+    assert "OK" in out
+
+
+def test_pba_hierarchical_exactly_four_exchanges():
+    """2-D pods topology: each of the two exchanges is a two-hop transpose
+    (intra-pod + cross-pod all_to_all) — exactly 4 all_to_alls, half with
+    strided (cross-pod) replica groups."""
+    out = run_with_devices("""
+        import re, jax, numpy as np
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro.core import make_factions, FactionSpec, PBAConfig
+        from repro.core.pba import pba_logical_block
+        from repro.launch.hlo_stats import all_to_all_span_bytes
+        from repro.runtime import Topology, blocking, spmd
+        procs = 8
+        table = make_factions(procs, FactionSpec(4, 2, 4, seed=1))
+        cfg = PBAConfig(vertices_per_proc=200, edges_per_vertex=3, seed=7,
+                        pair_capacity=256)
+        topo = Topology.pods(2, 4)
+        mesh = topo.build_mesh()
+        spec = topo.spec_axes
+        def body(procs_blk, s_blk):
+            ranks = blocking.logical_ranks(1, topo)
+            u, v, dropped, _, rounds = pba_logical_block(
+                ranks, procs_blk, s_blk, cfg, procs, 256, topo)
+            return u, v
+        f = jax.jit(spmd.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(spec, None), P(spec)),
+            out_specs=(P(spec, None), P(spec, None)), check_vma=False))
+        hlo = f.lower(jnp.asarray(table.procs),
+                      jnp.asarray(table.s)).compile().as_text()
+        n_a2a = len(re.findall(r" all-to-all\\(", hlo))
+        assert n_a2a == 4, f"expected exactly 4 all_to_alls, got {n_a2a}"
+        span = all_to_all_span_bytes(hlo)
+        assert span["n_local"] == 2 and span["n_cross"] == 2, span
         print("OK")
     """, 8)
     assert "OK" in out

@@ -12,11 +12,10 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit
-from repro.core import (FactionSpec, PBAConfig, PKConfig, block_factions,
-                        community_contrast, degree_counts, fit_power_law,
-                        generate_pba_host, generate_pk_host, make_factions,
-                        self_similarity_score, star_clique_seed)
+from benchmarks.common import emit, generate_edges
+from repro.api import GraphSpec
+from repro.core import (FactionSpec, community_contrast, degree_counts,
+                        fit_power_law, self_similarity_score, star_clique_seed)
 from repro.core.analysis import degree_assortativity
 
 
@@ -25,23 +24,23 @@ def run() -> list[str]:
 
     # --- ablation 1: faction block size -> community contrast ---
     for blk in (2, 4, 8):
-        table = block_factions(16, blk)
-        cfg = PBAConfig(vertices_per_proc=2000, edges_per_vertex=4,
-                        interfaction_prob=0.02, seed=3)
+        spec = GraphSpec(model="pba", procs=16, vertices_per_proc=2000,
+                         edges_per_vertex=4, interfaction_prob=0.02, seed=3,
+                         factions=f"block:{blk}", execution="host")
         t0 = time.perf_counter()
-        edges, _ = generate_pba_host(cfg, table)
+        edges, _ = generate_edges(spec)
         c = community_contrast(edges, num_blocks=16 // blk)
         rows.append(emit(f"abl_faction_block{blk}",
                          (time.perf_counter() - t0) * 1e6,
                          f"diag_contrast={c:.2f}"))
 
     # --- ablation 2: inter-faction probability -> contrast + gamma ---
-    table = block_factions(16, 4)
     for prob in (0.0, 0.05, 0.2, 0.5):
-        cfg = PBAConfig(vertices_per_proc=2000, edges_per_vertex=4,
-                        interfaction_prob=prob, seed=3)
+        spec = GraphSpec(model="pba", procs=16, vertices_per_proc=2000,
+                         edges_per_vertex=4, interfaction_prob=prob, seed=3,
+                         factions="block:4", execution="host")
         t0 = time.perf_counter()
-        edges, _ = generate_pba_host(cfg, table)
+        edges, _ = generate_edges(spec)
         c = community_contrast(edges, num_blocks=4)
         deg = np.asarray(degree_counts(edges))
         g = fit_power_law(deg, kmin=5).gamma_mle
@@ -50,11 +49,13 @@ def run() -> list[str]:
                          f"diag_contrast={c:.2f};gamma={g:.2f}"))
 
     # --- ablation 3: edges-per-vertex k -> gamma / assortativity ---
-    table = make_factions(8, FactionSpec(4, 2, 4, seed=1))
     for k in (2, 4, 8):
-        cfg = PBAConfig(vertices_per_proc=4000, edges_per_vertex=k, seed=7)
+        spec = GraphSpec(model="pba", procs=8, vertices_per_proc=4000,
+                         edges_per_vertex=k, seed=7,
+                         factions=FactionSpec(4, 2, 4, seed=1),
+                         execution="host")
         t0 = time.perf_counter()
-        edges, _ = generate_pba_host(cfg, table)
+        edges, _ = generate_edges(spec)
         deg = np.asarray(degree_counts(edges))
         g = fit_power_law(deg, kmin=max(k + 1, 3)).gamma_mle
         r = degree_assortativity(edges)
@@ -68,9 +69,10 @@ def run() -> list[str]:
     # block structure)...
     seed = star_clique_seed(4)
     for noise in (0.0, 0.5):
-        cfg = PKConfig(levels=6, noise=noise, seed=9)
+        spec = GraphSpec(model="pk", levels=6, noise=noise, seed=9,
+                         seed_graph=seed, execution="host")
         t0 = time.perf_counter()
-        edges, _ = generate_pk_host(seed, cfg)
+        edges, _ = generate_edges(spec)
         sim = self_similarity_score(edges, seed.num_vertices)
         c = community_contrast(edges, num_blocks=seed.num_vertices)
         rows.append(emit(f"abl_pk_noise{noise}",
@@ -80,7 +82,8 @@ def run() -> list[str]:
     # --- ablation 4b: ...whereas the paper's XOR-with-ER pass does degrade
     # structure toward uniform.
     from repro.core import xor_randomize
-    base, _ = generate_pk_host(seed, PKConfig(levels=6, seed=9))
+    base, _ = generate_edges(GraphSpec(model="pk", levels=6, seed=9,
+                                       seed_graph=seed, execution="host"))
     for frac in (0.0, 0.25, 1.0):
         t0 = time.perf_counter()
         e2 = xor_randomize(base, flip_fraction=frac, seed=4) if frac else base

@@ -1,7 +1,11 @@
 """Shared benchmark utilities: timing, CSV row emission, and compiled-cost
 introspection routed through ``repro.runtime`` (the version-portable
 cost_analysis shim) so benchmark numbers and the CI collective-bytes gate
-read XLA's analysis the same way on every JAX version."""
+read XLA's analysis the same way on every JAX version.
+
+All graph generation in benchmarks/ goes through the ``repro.api`` front
+door (:func:`generate_edges`) — the legacy per-model entry points are
+banned here by the grep gate in tests/test_runtime.py."""
 from __future__ import annotations
 
 import time
@@ -9,7 +13,14 @@ from typing import Callable
 
 import jax
 
+from repro import api
 from repro.runtime import spmd
+
+
+def generate_edges(spec: "api.GraphSpec"):
+    """Generate through the front door; returns (edges, stats)."""
+    res = api.generate(spec)
+    return res.edges, res.stats
 
 
 def time_jax(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:

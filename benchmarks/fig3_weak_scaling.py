@@ -13,8 +13,9 @@ devices via subprocess.
 from __future__ import annotations
 
 from benchmarks.common import emit, time_jax
-from repro.core import (FactionSpec, PBAConfig, PKConfig, dense_power_seed,
-                        generate_pba_host, generate_pk_host, make_factions)
+from repro import api
+from repro.api import GraphSpec
+from repro.core import FactionSpec, dense_power_seed
 
 
 def run() -> list[str]:
@@ -22,17 +23,17 @@ def run() -> list[str]:
     base_v, k = 40_000, 4
     us1 = None
     for p in (1, 2, 4, 8):
-        table = make_factions(p, FactionSpec(max(p // 2, 1), 1,
-                                             max(p // 2, 1), seed=1))
-        cfg = PBAConfig(vertices_per_proc=base_v, edges_per_vertex=k,
-                        interfaction_prob=0.05, seed=7)
+        pl = api.plan(GraphSpec(
+            model="pba", procs=p, vertices_per_proc=base_v,
+            edges_per_vertex=k, interfaction_prob=0.05, seed=7,
+            factions=FactionSpec(max(p // 2, 1), 1, max(p // 2, 1), seed=1),
+            execution="host"))
 
-        def gen():
-            e, _ = generate_pba_host(cfg, table)
-            return e.src
+        def gen(pl=pl):
+            return api.generate(pl).edges.src
 
         t = time_jax(gen, warmup=1, iters=3)
-        edges = p * base_v * k
+        edges = pl.requested_edges
         us_per_edge = t * 1e6 / edges
         if p == 1:
             us1 = us_per_edge
@@ -47,14 +48,14 @@ def run() -> list[str]:
         # PK weak scaling: growing problem, constant per-edge work expected
         # (closed form, zero communication at any P — tests verify the HLO).
         seed = dense_power_seed(n0, 10, seed=0)
-        cfg = PKConfig(levels=levels)
+        pl = api.plan(GraphSpec(model="pk", levels=levels, seed_graph=seed,
+                                execution="host"))
 
-        def gen():
-            e, _ = generate_pk_host(seed, cfg)
-            return e.src
+        def gen(pl=pl):
+            return api.generate(pl).edges.src
 
         t = time_jax(gen, warmup=1, iters=3)
-        edges = seed.num_edges ** levels
+        edges = pl.requested_edges
         us_per_edge = t * 1e6 / edges
         if us1 is None:
             us1 = us_per_edge

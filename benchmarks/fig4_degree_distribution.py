@@ -7,12 +7,14 @@ both (their fitted values: PBA ≈ 2.9, PK ≈ 2.2 regime, read off Fig. 4).
 """
 from __future__ import annotations
 
+import time
+
 import numpy as np
 
-from benchmarks.common import emit, time_jax
-from repro.core import (FactionSpec, PBAConfig, PKConfig, SeedGraph,
-                        degree_counts, fit_power_law, generate_pba_host,
-                        generate_pk_host, make_factions)
+from benchmarks.common import emit, generate_edges
+from repro.api import GraphSpec
+from repro.core import (FactionSpec, SeedGraph, degree_counts,
+                        fit_power_law)
 
 
 def paper_pk_seed() -> SeedGraph:
@@ -26,12 +28,13 @@ def paper_pk_seed() -> SeedGraph:
 def run() -> list[str]:
     rows = []
     # PBA at paper scale: 330k vertices, 2M edges (k=6)
-    table = make_factions(16, FactionSpec(8, 2, 6, seed=3))
-    cfg = PBAConfig(vertices_per_proc=330_000 // 16, edges_per_vertex=6,
-                    interfaction_prob=0.05, seed=11)
-    import time
+    spec = GraphSpec(model="pba", procs=16,
+                     vertices_per_proc=330_000 // 16, edges_per_vertex=6,
+                     interfaction_prob=0.05, seed=11,
+                     factions=FactionSpec(8, 2, 6, seed=3),
+                     execution="host")
     t0 = time.perf_counter()
-    edges, stats = generate_pba_host(cfg, table)
+    edges, stats = generate_edges(spec)
     deg = np.asarray(degree_counts(edges))
     fit = fit_power_law(deg, kmin=6)
     t = time.perf_counter() - t0
@@ -42,9 +45,10 @@ def run() -> list[str]:
                      f"{fit.gamma_mle > 2.0}"))
 
     # PK at paper scale: seed 20v/40e, 4 levels -> 160k vertices, 2.56M edges
-    seed = paper_pk_seed()
     t0 = time.perf_counter()
-    edges, _ = generate_pk_host(seed, PKConfig(levels=4, noise=0.02, seed=5))
+    edges, _ = generate_edges(GraphSpec(model="pk", levels=4, noise=0.02,
+                                        seed=5, seed_graph=paper_pk_seed(),
+                                        execution="host"))
     deg = np.asarray(degree_counts(edges))
     fit = fit_power_law(deg, kmin=4)
     t = time.perf_counter() - t0

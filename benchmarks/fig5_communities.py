@@ -10,31 +10,32 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit
-from repro.core import (FactionSpec, PBAConfig, PKConfig, block_factions,
-                        community_contrast, generate_pba_host,
-                        generate_pk_host, self_similarity_score,
-                        star_clique_seed)
+from benchmarks.common import emit, generate_edges
+from repro import api
+from repro.api import GraphSpec
+from repro.core import community_contrast, self_similarity_score
 
 
 def run() -> list[str]:
     rows = []
-    table = block_factions(16, 4)
-    cfg = PBAConfig(vertices_per_proc=10_000, edges_per_vertex=6,
-                    interfaction_prob=0.03, seed=11)
+    spec = GraphSpec(model="pba", procs=16, vertices_per_proc=10_000,
+                     edges_per_vertex=6, interfaction_prob=0.03, seed=11,
+                     factions="block:4", execution="host")
     t0 = time.perf_counter()
-    edges, _ = generate_pba_host(cfg, table)
+    edges, _ = generate_edges(spec)
     contrast = community_contrast(edges, num_blocks=4)
     t = time.perf_counter() - t0
     rows.append(emit("fig5_pba_communities", t * 1e6,
                      f"diag_contrast={contrast:.2f};has_communities="
                      f"{contrast > 1.5}"))
 
-    seed = star_clique_seed(5)
+    pk_plan = api.plan(GraphSpec(model="pk", levels=7, noise=0.02, seed=5,
+                                 execution="host"))
+    n0 = pk_plan.seed_graph.num_vertices
     t0 = time.perf_counter()
-    edges, _ = generate_pk_host(seed, PKConfig(levels=7, noise=0.02, seed=5))
-    contrast = community_contrast(edges, num_blocks=5)
-    sim = self_similarity_score(edges, seed.num_vertices)
+    edges = api.generate(pk_plan).edges
+    contrast = community_contrast(edges, num_blocks=n0)
+    sim = self_similarity_score(edges, n0)
     t = time.perf_counter() - t0
     rows.append(emit("fig5_pk_communities", t * 1e6,
                      f"diag_contrast={contrast:.2f};"

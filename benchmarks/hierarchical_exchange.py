@@ -22,42 +22,17 @@ Usage (forced host devices — the collectives are real, the links are not):
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from benchmarks.common import emit, time_jax
-from repro.core import FactionSpec, PBAConfig, make_factions
-from repro.core.pba import pba_logical_block
+from repro import api
+from repro.api import GraphSpec
+from repro.core import FactionSpec
+from repro.launch.bench import compile_sharded_pba
 from repro.launch.hlo_stats import all_to_all_span_bytes
-from repro.runtime import Topology, blocking, spmd
+from repro.runtime import Topology, spmd
 
 PAIR_CAPACITY = 8
 LP_SWEEP = (1, 25, 125)  # P = lp * 8 = 8 .. 1000 on the 8-device smoke mesh
-
-
-def _compile(cfg: PBAConfig, table, topo: Topology):
-    num_procs = table.num_procs
-    lp = topo.lp(num_procs)
-    d = topo.num_devices
-    mesh = topo.build_mesh()
-    spec = topo.spec_axes
-
-    def body(procs_blk, s_blk):
-        ranks = blocking.logical_ranks(lp, topo)
-        u, v, dropped, _, rounds = pba_logical_block(
-            ranks, procs_blk[0], s_blk[0], cfg, num_procs, PAIR_CAPACITY,
-            topo)
-        return u[None], v[None], dropped[None], rounds[None]
-
-    fn = jax.jit(spmd.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(spec, None, None), P(spec, None)),
-        out_specs=(P(spec, None, None), P(spec, None, None), P(spec),
-                   P(spec)),
-        check_vma=False))
-    procs = jnp.asarray(table.procs).reshape(d, lp, table.max_s)
-    s = jnp.asarray(table.s).reshape(d, lp)
-    return fn, (procs, s)
 
 
 def run() -> list[str]:
@@ -66,14 +41,16 @@ def run() -> list[str]:
     topos = [Topology.flat(d)]
     if d % 2 == 0 and d >= 4:
         topos += [Topology.pods(2, d // 2), Topology.pods(d // 2, 2)]
-    cfg = PBAConfig(vertices_per_proc=40, edges_per_vertex=2, seed=7,
-                    pair_capacity=PAIR_CAPACITY)
     for lp in LP_SWEEP:
         p = lp * d
-        table = make_factions(p, FactionSpec(max(p // 2, 1), 2,
-                                             max(p // 2, 2), seed=1))
         for topo in topos:
-            fn, args = _compile(cfg, table, topo)
+            pl = api.plan(GraphSpec(
+                model="pba", procs=p, vertices_per_proc=40,
+                edges_per_vertex=2, seed=7, pair_capacity=PAIR_CAPACITY,
+                factions=FactionSpec(max(p // 2, 1), 2, max(p // 2, 2),
+                                     seed=1),
+                topology=topo, execution="sharded"))
+            fn, args = compile_sharded_pba(pl)
             compiled = fn.lower(*args).compile()
             cost = spmd.cost_analysis(compiled)
             span = all_to_all_span_bytes(compiled.as_text())

@@ -10,51 +10,51 @@ adversarial hub layout (the per-pair worst case for a fixed capacity):
 
 Derived columns: drops, rounds actually run, C_r, the peak per-proc exchange
 buffer in bytes (P * C_r * 4), and the compiled program's total bytes
-accessed via the runtime cost_analysis shim.
+accessed via the runtime cost_analysis shim. Generation and config
+resolution go through the ``repro.api`` front door (the plan carries the
+derived pair capacity and the resolved PBAConfig/table).
 """
 from __future__ import annotations
 
-import dataclasses
-
 from benchmarks.common import bytes_accessed, emit, time_jax
-from repro.core import PBAConfig, generate_pba_host, hub_factions
+from repro import api
+from repro.api import GraphSpec
 from repro.runtime import streaming
 
 import jax.numpy as jnp
 
 
-def _compiled_bytes(cfg: PBAConfig, table) -> float:
+def _compiled_bytes(pl: "api.GenPlan") -> float:
     """Bytes accessed of the full host-mode PBA program (runtime-routed)."""
-    from repro.core.pba import _derived_pair_capacity, pba_logical_block
+    from repro.core.pba import pba_logical_block
     from repro.runtime import Topology
 
-    num_procs = table.num_procs
-    pair_capacity = _derived_pair_capacity(cfg, table)
+    num_procs = pl.num_procs
     topo = Topology.host()
 
     def run(procs, s, ranks):
         u, v, dropped, _, rounds = pba_logical_block(
-            ranks, procs, s, cfg, num_procs, pair_capacity, topo)
+            ranks, procs, s, pl.config, num_procs, pl.pair_capacity, topo)
         return u, v, dropped, rounds
 
-    return bytes_accessed(run, jnp.asarray(table.procs),
-                          jnp.asarray(table.s),
+    return bytes_accessed(run, jnp.asarray(pl.table.procs),
+                          jnp.asarray(pl.table.s),
                           jnp.arange(num_procs, dtype=jnp.int32))
 
 
 def run() -> list[str]:
     rows = []
     p, vpp, k, cap = 8, 2000, 4, 256
-    table = hub_factions(p)
     for rounds in (None, 1, 2, 4, 8):
-        cfg = PBAConfig(vertices_per_proc=vpp, edges_per_vertex=k, seed=7,
-                        pair_capacity=cap, exchange_rounds=rounds,
-                        total_capacity_factor=8)
-        edges, stats = generate_pba_host(cfg, table)  # warm + stats
+        spec = GraphSpec(model="pba", procs=p, vertices_per_proc=vpp,
+                         edges_per_vertex=k, seed=7, factions="hub",
+                         pair_capacity=cap, exchange_rounds=rounds,
+                         total_capacity_factor=8, execution="host")
+        pl = api.plan(spec)
+        stats = api.generate(pl).stats  # warm + stats
 
-        def gen(cfg=cfg):
-            e, _ = generate_pba_host(cfg, table)
-            return e.src
+        def gen(pl=pl):
+            return api.generate(pl).edges.src
 
         t = time_jax(gen, warmup=1, iters=3)
         c_r = cap if rounds is None else streaming.round_capacity(cap, rounds)
@@ -63,7 +63,7 @@ def run() -> list[str]:
             f"stream_exchange_{name}", t * 1e6,
             f"drops={stats.dropped_edges};rounds_run={stats.exchange_rounds};"
             f"c_r={c_r};peak_buf_bytes={p * c_r * 4};"
-            f"bytes_accessed={_compiled_bytes(cfg, table):.0f}"))
+            f"bytes_accessed={_compiled_bytes(pl):.0f}"))
     return rows
 
 

@@ -8,11 +8,10 @@ and report the per-core rate ratio vs the paper.
 """
 from __future__ import annotations
 
-import jax.numpy as jnp
-
 from benchmarks.common import emit, time_jax
-from repro.core import (FactionSpec, PBAConfig, PKConfig, dense_power_seed,
-                        generate_pba_host, generate_pk_host, make_factions)
+from repro import api
+from repro.api import GraphSpec
+from repro.core import FactionSpec, dense_power_seed
 
 PAPER_PBA_RATE = 5e9 / 12.39 / 1000    # edges/s/proc
 PAPER_PK_RATE = 5.4e9 / 2.53 / 1000
@@ -21,32 +20,32 @@ PAPER_PK_RATE = 5.4e9 / 2.53 / 1000
 def run() -> list[str]:
     rows = []
     # --- PBA: 8 logical procs x 125k vertices x 4 edges = 4M edges ---
-    table = make_factions(8, FactionSpec(4, 2, 4, seed=1))
-    cfg = PBAConfig(vertices_per_proc=125_000, edges_per_vertex=4,
-                    interfaction_prob=0.05, seed=7)
+    pba = api.plan(GraphSpec(model="pba", procs=8,
+                             vertices_per_proc=125_000, edges_per_vertex=4,
+                             interfaction_prob=0.05, seed=7,
+                             factions=FactionSpec(4, 2, 4, seed=1),
+                             execution="host"))
 
     def gen_pba():
-        edges, _ = generate_pba_host(cfg, table)
-        return edges.src
+        return api.generate(pba).edges.src
 
     t = time_jax(gen_pba, warmup=1, iters=3)
-    edges_n = 8 * cfg.edges_per_proc
+    edges_n = pba.requested_edges
     rate = edges_n / t
     rows.append(emit("table1_pba_generate", t * 1e6,
                      f"edges={edges_n};edges_per_s={rate:.3e};"
                      f"x_paper_proc={rate / PAPER_PBA_RATE:.1f}"))
 
-    # --- PK: seed 500 edges, 4 levels -> 62.5B... use 3 levels = 125M?
-    # keep CPU-friendly: e0=280, L=3 -> 21.9M edges
+    # --- PK: keep CPU-friendly: e0=280, L=3 -> 21.9M edges ---
     seed = dense_power_seed(20, 14, seed=0)   # n0=20, e0=280
-    kcfg = PKConfig(levels=3, noise=0.0)
+    pk = api.plan(GraphSpec(model="pk", levels=3, seed_graph=seed,
+                            execution="host"))
 
     def gen_pk():
-        edges, _ = generate_pk_host(seed, kcfg)
-        return edges.src
+        return api.generate(pk).edges.src
 
     t = time_jax(gen_pk, warmup=1, iters=3)
-    edges_n = seed.num_edges ** 3
+    edges_n = pk.requested_edges
     rate = edges_n / t
     rows.append(emit("table1_pk_generate", t * 1e6,
                      f"edges={edges_n};edges_per_s={rate:.3e};"

@@ -7,21 +7,19 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from benchmarks.common import emit
-from repro.core import (FactionSpec, PBAConfig, PKConfig, generate_pba_host,
-                        generate_pk_host, make_factions, sampled_path_stats,
-                        star_clique_seed)
+from benchmarks.common import emit, generate_edges
+from repro.api import GraphSpec
+from repro.core import FactionSpec, sampled_path_stats
 
 
 def run() -> list[str]:
     rows = []
-    table = make_factions(16, FactionSpec(8, 2, 6, seed=3))
-    cfg = PBAConfig(vertices_per_proc=20_000, edges_per_vertex=6,
-                    interfaction_prob=0.05, seed=11)
+    spec = GraphSpec(model="pba", procs=16, vertices_per_proc=20_000,
+                     edges_per_vertex=6, interfaction_prob=0.05, seed=11,
+                     factions=FactionSpec(8, 2, 6, seed=3),
+                     execution="host")
     t0 = time.perf_counter()
-    edges, _ = generate_pba_host(cfg, table)
+    edges, _ = generate_edges(spec)
     ps = sampled_path_stats(edges, num_sources=12, seed=0)
     t = time.perf_counter() - t0
     rows.append(emit("table2_pba_paths", t * 1e6,
@@ -29,9 +27,9 @@ def run() -> list[str]:
                      f"diameter={ps.diameter_estimate};"
                      f"paper_avg=6.26;paper_diam=12"))
 
-    seed = star_clique_seed(5)
     t0 = time.perf_counter()
-    edges, _ = generate_pk_host(seed, PKConfig(levels=7, noise=0.02, seed=5))
+    edges, _ = generate_edges(GraphSpec(model="pk", levels=7, noise=0.02,
+                                        seed=5, execution="host"))
     ps = sampled_path_stats(edges, num_sources=12, seed=0)
     t = time.perf_counter() - t0
     rows.append(emit("table2_pk_paths", t * 1e6,

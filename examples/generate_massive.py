@@ -1,7 +1,10 @@
 """Multi-device massive-graph generation with checkpoint/restart (the paper's
 end-to-end scenario: the generator as a cluster service).
 
-Run with N host devices to exercise the real shard_map collectives:
+One front door: every scenario is a ``repro.api.GraphSpec`` compiled by
+``api.plan`` (inspect it with --dry-run — no JAX compilation) and executed
+by ``api.generate``. Run with N host devices to exercise the real
+shard_map collectives:
 
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/generate_massive.py --procs 8
@@ -9,9 +12,10 @@ Run with N host devices to exercise the real shard_map collectives:
 Demonstrates: distributed PBA + PK, the multi-round streaming exchange
 (--exchange-rounds: zero dropped edges with a 1/R-size exchange buffer),
 out-of-core generation straight to resumable shards (--out-dir: the graph
-only has to fit on disk), on-device degree histogram (Pallas kernel path on
-TPU), generation-state checkpointing (seed + partition is the whole state —
-regeneration beats storage at >100M edges/s), and restart.
+only has to fit on disk), preset scenarios (--preset paper_smoke,
+paper_1b_5b, ...), plan inspection (--dry-run), generation-state
+checkpointing (seed + partition is the whole state — regeneration beats
+storage at >100M edges/s), and restart.
 """
 from __future__ import annotations
 
@@ -24,14 +28,52 @@ import numpy as np
 
 import jax
 
-from repro.core import (FactionSpec, PBAConfig, PKConfig, PBAStream,
-                        PKStream, degree_counts, fit_power_law, generate_pba,
-                        generate_pba_sharded, generate_pk, make_factions,
-                        star_clique_seed, stream_to_shards)
+from repro import api
+from repro.core import degree_counts, fit_power_law
+
+
+def build_specs(args, state, n_dev):
+    """(pba_spec, pk_spec) for the CLI flags + checkpoint state."""
+    out_of_core = args.out_dir is not None
+    topology = None
+    if args.pods:
+        if out_of_core:
+            raise SystemExit(
+                "--pods selects the on-device hierarchical exchange; the "
+                "out-of-core stream driver (--out-dir) runs the host path "
+                "— drop one of the two flags.")
+        from repro.runtime import Topology
+        rows, cols = (int(x) for x in args.pods.lower().split("x"))
+        if rows * cols != n_dev:
+            raise SystemExit(f"--pods {args.pods} needs {rows * cols} "
+                             f"devices, have {n_dev}")
+        topology = Topology.pods(rows, cols)
+
+    pba = api.GraphSpec(
+        model="pba", procs=state["procs"],
+        vertices_per_proc=state["vpp"], edges_per_vertex=state["k"],
+        interfaction_prob=0.05, pair_capacity=args.pair_capacity,
+        exchange_rounds=args.exchange_rounds, seed=state["seed"],
+        topology=topology,
+        execution="streamed" if out_of_core else "auto",
+        sink="shards" if out_of_core else "memory",
+        out_dir=os.path.join(args.out_dir, "pba") if out_of_core else None)
+    pk = api.GraphSpec(
+        model="pk", levels=args.pk_levels, noise=0.05, seed=3,
+        slab_edges=args.pk_slab_edges,
+        execution="streamed" if out_of_core else "auto",
+        sink="shards" if out_of_core else "memory",
+        out_dir=os.path.join(args.out_dir, "pk") if out_of_core else None)
+    return pba, pk
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default=None, choices=sorted(api.PRESETS),
+                    help="run a named scenario (overrides the scale flags)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the resolved plan(s) and exit without "
+                         "generating (no JAX compilation)")
     ap.add_argument("--procs", type=int, default=len(jax.devices()),
                     help="logical processors; may exceed device count "
                          "(paper: 1000 ranks) as long as it divides evenly")
@@ -58,6 +100,29 @@ def main() -> None:
     ap.add_argument("--ckpt", default="/tmp/repro_gen_ckpt.json")
     args = ap.parse_args()
     n_dev = len(jax.devices())
+
+    if args.preset:
+        spec = api.preset(args.preset)
+        if args.out_dir:
+            spec = spec.replace(execution="streamed", sink="shards",
+                                out_dir=os.path.join(args.out_dir,
+                                                     spec.model))
+        pl = api.plan(spec)
+        print(f"preset {args.preset}:")
+        print(pl.describe())
+        if args.dry_run:
+            return
+        t0 = time.perf_counter()
+        res = api.generate(pl)
+        t = time.perf_counter() - t0
+        tag = "PBA" if spec.model == "pba" else "PK"
+        where = f" -> {res.out_dir}" if res.out_dir else ""
+        print(f"{tag}: {res.stats.emitted_edges:,} edges{where} in {t:.2f}s "
+              f"({res.stats.emitted_edges / t:.3e} edges/s) "
+              f"drops={res.stats.dropped_edges} "
+              f"rounds={res.stats.exchange_rounds}")
+        return
+
     procs = args.procs
     if procs % n_dev:
         procs = max((procs // n_dev) * n_dev, n_dev)
@@ -83,83 +148,47 @@ def main() -> None:
                 f"device count that divides {state['procs']}, delete the "
                 "checkpoint to start a new generation, or resume "
                 "out-of-core with --out-dir.")
-    else:
+    elif not args.dry_run:
+        # a dry run is pure inspection — it must not seed restart state
         with open(args.ckpt, "w") as f:
             json.dump(state, f)
 
-    p = state["procs"]
-    table = make_factions(p, FactionSpec(max(p // 2, 1), min(2, p),
-                                         min(max(p // 2, 2), p), seed=1))
-    cfg = PBAConfig(vertices_per_proc=state["vpp"],
-                    edges_per_vertex=state["k"],
-                    interfaction_prob=0.05,
-                    pair_capacity=args.pair_capacity,
-                    exchange_rounds=args.exchange_rounds,
-                    seed=state["seed"])
-
-    topology = None
-    if args.pods:
-        if args.out_dir:
-            raise SystemExit(
-                "--pods selects the on-device hierarchical exchange; the "
-                "out-of-core stream driver (--out-dir) runs the host path "
-                "— drop one of the two flags.")
-        from repro.runtime import Topology
-        rows, cols = (int(x) for x in args.pods.lower().split("x"))
-        if rows * cols != n_dev:
-            raise SystemExit(f"--pods {args.pods} needs {rows * cols} "
-                             f"devices, have {n_dev}")
-        topology = Topology.pods(rows, cols)
-
-    if args.out_dir:
-        # Out-of-core: generator blocks go straight to resumable shards;
-        # a preempted run re-executes only the missing blocks.
-        pba_dir = os.path.join(args.out_dir, "pba")
-        t0 = time.perf_counter()
-        stream = PBAStream(cfg, table)
-        _, stats = stream_to_shards(stream, pba_dir)
-        t = time.perf_counter() - t0
-        print(f"PBA: {stats.emitted_edges:,} edges -> {pba_dir} in {t:.2f}s "
-              f"({stats.emitted_edges / t:.3e} edges/s) "
-              f"rounds={stats.exchange_rounds} drops={stats.dropped_edges}")
-
-        pk_dir = os.path.join(args.out_dir, "pk")
-        t0 = time.perf_counter()
-        pk_stream = PKStream(star_clique_seed(5),
-                             PKConfig(levels=args.pk_levels, noise=0.05,
-                                      seed=3),
-                             slab_edges=args.pk_slab_edges)
-        _, pk_stats = stream_to_shards(pk_stream, pk_dir)
-        t = time.perf_counter() - t0
-        print(f"PK:  {pk_stats.emitted_edges:,} edges -> {pk_dir} in "
-              f"{t:.2f}s ({pk_stats.emitted_edges / t:.3e} edges/s, "
-              f"{pk_stream.num_blocks} slabs, zero communication)")
+    pba_spec, pk_spec = build_specs(args, state, n_dev)
+    pba_plan = api.plan(pba_spec)
+    pk_plan = api.plan(pk_spec)
+    if args.dry_run:
+        print(pba_plan.describe())
+        print(pk_plan.describe())
         return
 
     t0 = time.perf_counter()
-    gen = generate_pba if state["procs"] == n_dev else generate_pba_sharded
-    edges, stats = gen(cfg, table, topology=topology)
-    jax.block_until_ready(edges.src)
+    res = api.generate(pba_plan)
+    if res.edges is not None:
+        jax.block_until_ready(res.edges.src)
     t = time.perf_counter() - t0
+    stats = res.stats
+    where = f" -> {res.out_dir}" if res.out_dir else ""
     rounds = (f" rounds={stats.exchange_rounds}"
-              if args.exchange_rounds else "")
-    print(f"PBA: {stats.emitted_edges:,} edges, {state['procs']} logical "
-          f"procs on {n_dev} devices in {t:.2f}s "
+              if args.exchange_rounds or args.out_dir else "")
+    print(f"PBA: {stats.emitted_edges:,} edges{where}, {state['procs']} "
+          f"logical procs on {n_dev} devices in {t:.2f}s "
           f"({stats.emitted_edges / t:.3e} edges/s) "
           f"drops={stats.dropped_edges}{rounds}")
 
-    deg = np.asarray(degree_counts(edges))
-    fit = fit_power_law(deg, kmin=5)
-    print(f"     gamma_mle={fit.gamma_mle:.2f}, max_degree={deg.max()}")
+    if res.edges is not None:
+        deg = np.asarray(degree_counts(res.edges))
+        fit = fit_power_law(deg, kmin=5)
+        print(f"     gamma_mle={fit.gamma_mle:.2f}, max_degree={deg.max()}")
 
-    seed = star_clique_seed(5)
     t0 = time.perf_counter()
-    pk_edges, pk_stats = generate_pk(seed, PKConfig(levels=args.pk_levels,
-                                                    noise=0.05, seed=3))
-    jax.block_until_ready(pk_edges.src)
+    pk_res = api.generate(pk_plan)
+    if pk_res.edges is not None:
+        jax.block_until_ready(pk_res.edges.src)
     t = time.perf_counter() - t0
-    print(f"PK:  {pk_stats.emitted_edges:,} edges in {t:.2f}s "
-          f"({pk_stats.emitted_edges / t:.3e} edges/s, zero communication)")
+    where = f" -> {pk_res.out_dir}" if pk_res.out_dir else ""
+    print(f"PK:  {pk_res.stats.emitted_edges:,} edges{where} in {t:.2f}s "
+          f"({pk_res.stats.emitted_edges / t:.3e} edges/s, "
+          f"zero communication)")
 
 
 if __name__ == "__main__":

@@ -1,24 +1,27 @@
 """Quickstart: generate PBA + PK graphs, verify the paper's properties.
 
+One front door: describe the graph with a ``repro.api.GraphSpec`` and call
+``repro.api.generate`` — the planner picks the execution path.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import (FactionSpec, PBAConfig, PKConfig, community_contrast,
-                        degree_counts, fit_power_law, generate_pba_host,
-                        generate_pk_host, make_factions, sampled_path_stats,
-                        star_clique_seed)
+from repro import api
+from repro.core import (FactionSpec, community_contrast, degree_counts,
+                        fit_power_law, sampled_path_stats)
 
 
 def main() -> None:
     # ---- PBA: two-phase preferential attachment over 8 logical processors
-    table = make_factions(8, FactionSpec(num_factions=4, min_size=2,
-                                         max_size=4, seed=1))
-    cfg = PBAConfig(vertices_per_proc=4000, edges_per_vertex=4,
-                    interfaction_prob=0.05, seed=7)
-    edges, stats = generate_pba_host(cfg, table)
+    res = api.generate(api.GraphSpec(
+        model="pba", procs=8, vertices_per_proc=4000, edges_per_vertex=4,
+        interfaction_prob=0.05, seed=7,
+        factions=FactionSpec(num_factions=4, min_size=2, max_size=4,
+                             seed=1)))
+    edges, stats = res.edges, res.stats
     deg = np.asarray(degree_counts(edges))
     fit = fit_power_law(deg, kmin=5)
     paths = sampled_path_stats(edges, num_sources=8)
@@ -32,9 +35,9 @@ def main() -> None:
     print(f"  communities: contrast={community_contrast(edges, 8):.2f}")
 
     # ---- PK: closed-form Kronecker expansion of a 5-vertex seed
-    seed = star_clique_seed(5)
-    edges, stats = generate_pk_host(seed, PKConfig(levels=6, noise=0.05,
-                                                   seed=3))
+    res = api.generate(api.GraphSpec(model="pk", levels=6, noise=0.05,
+                                     seed=3))
+    edges, stats = res.edges, res.stats
     deg = np.asarray(degree_counts(edges))
     fit = fit_power_law(deg, kmin=4)
     paths = sampled_path_stats(edges, num_sources=8)

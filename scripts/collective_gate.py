@@ -1,8 +1,10 @@
 """Collective-bytes regression gate (ROADMAP open item), per-topology.
 
 Compiles the real sharded PBA exchange program on the forced-host-device
-mesh and reads its total 'bytes accessed' through the version-portable
-``repro.runtime.spmd.cost_analysis`` shim. Three mechanical checks:
+mesh (scenario configuration resolved through the ``repro.api`` front
+door: GraphSpec -> plan) and reads its total 'bytes accessed' through the
+version-portable ``repro.runtime.spmd.cost_analysis`` shim. Three
+mechanical checks:
 
   1. Capacity scaling (flat topology): shrinking ``pair_capacity`` 4x must
      shrink the compiled program's bytes accessed — if the exchange buffers
@@ -36,13 +38,13 @@ import os
 import sys
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from repro.core import FactionSpec, PBAConfig, make_factions
-from repro.core.pba import pba_logical_block
+from repro import api
+from repro.api import GraphSpec
+from repro.core import FactionSpec
+from repro.launch.bench import compile_sharded_pba
 from repro.launch.hlo_stats import all_to_all_span_bytes
-from repro.runtime import Topology, blocking, spmd
+from repro.runtime import Topology, spmd
 
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "collective_bytes_baseline.json")
@@ -51,40 +53,26 @@ TOLERANCE = 0.25  # fractional drift allowed before the gate trips
 # Pod-scale reference: the paper's 1000 MPI ranks as logical processors
 # over the forced host devices (lp = 1000 / D).
 POD_SCALE_P = 1000
-POD_SCALE_CFG = PBAConfig(vertices_per_proc=40, edges_per_vertex=2, seed=7,
-                          pair_capacity=8)
 
 
-def compile_exchange(cfg: PBAConfig, table, pair_capacity: int,
-                     topo: Topology):
-    """Compiled sharded PBA program for ``topo`` (lp = P / D per device)."""
-    num_procs = table.num_procs
-    lp = topo.lp(num_procs)
-    d = topo.num_devices
-    mesh = topo.build_mesh()
-    spec = topo.spec_axes
-
-    def body(procs_blk, s_blk):
-        ranks = blocking.logical_ranks(lp, topo)
-        u, v, dropped, _, rounds = pba_logical_block(
-            ranks, procs_blk[0], s_blk[0], cfg, num_procs, pair_capacity,
-            topo)
-        return u[None], v[None], dropped[None], rounds[None]
-
-    fn = jax.jit(spmd.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(spec, None, None), P(spec, None)),
-        out_specs=(P(spec, None, None), P(spec, None, None), P(spec),
-                   P(spec)),
-        check_vma=False))
-    procs = jnp.asarray(table.procs).reshape(d, lp, table.max_s)
-    s = jnp.asarray(table.s).reshape(d, lp)
-    return fn.lower(procs, s).compile()
+def _spec(procs: int, vpp: int, k: int, pair_capacity, topo: Topology
+          ) -> GraphSpec:
+    return GraphSpec(
+        model="pba", procs=procs, vertices_per_proc=vpp, edges_per_vertex=k,
+        seed=7, pair_capacity=pair_capacity,
+        factions=FactionSpec(max(procs // 2, 1), 2, max(procs // 2, 2),
+                             seed=1),
+        topology=topo, execution="sharded")
 
 
-def compiled_bytes(cfg: PBAConfig, table, pair_capacity: int,
-                   topo: Topology) -> float:
-    compiled = compile_exchange(cfg, table, pair_capacity, topo)
+def compile_exchange(pl: "api.GenPlan"):
+    """Compiled sharded PBA program for a plan (lp = P / D per device)."""
+    fn, args = compile_sharded_pba(pl)
+    return fn.lower(*args).compile()
+
+
+def compiled_bytes(pl: "api.GenPlan") -> float:
+    compiled = compile_exchange(pl)
     return float(spmd.cost_analysis(compiled).get("bytes accessed", 0.0))
 
 
@@ -98,14 +86,11 @@ def gate_topologies(n_dev: int) -> list[Topology]:
 
 def main() -> int:
     n_dev = len(jax.devices())
-    table = make_factions(n_dev, FactionSpec(max(n_dev // 2, 1), 2,
-                                             max(n_dev // 2, 2), seed=1))
-    cfg = PBAConfig(vertices_per_proc=200, edges_per_vertex=3, seed=7)
     flat = Topology.flat(n_dev)
 
     # --- 1: capacity scaling on the flat topology ---------------------------
-    big = compiled_bytes(cfg, table, 256, flat)
-    small = compiled_bytes(cfg, table, 64, flat)
+    big = compiled_bytes(api.plan(_spec(n_dev, 200, 3, 256, flat)))
+    small = compiled_bytes(api.plan(_spec(n_dev, 200, 3, 64, flat)))
     if big == 0.0:
         print("collective gate: backend offers no cost analysis — skipped")
         return 0
@@ -125,14 +110,11 @@ def main() -> int:
               f"{n_dev} devices — skipping the pod-scale leg")
         pod_bytes: dict[str, float] = {}
     else:
-        pod_table = make_factions(POD_SCALE_P,
-                                  FactionSpec(POD_SCALE_P // 2, 2,
-                                              POD_SCALE_P // 2, seed=1))
-        cap = POD_SCALE_CFG.pair_capacity
         pod_bytes = {}
         spans = {}
         for topo in topos:
-            compiled = compile_exchange(POD_SCALE_CFG, pod_table, cap, topo)
+            pl = api.plan(_spec(POD_SCALE_P, 40, 2, 8, topo))
+            compiled = compile_exchange(pl)
             pod_bytes[topo.label] = float(
                 spmd.cost_analysis(compiled).get("bytes accessed", 0.0))
             spans[topo.label] = all_to_all_span_bytes(compiled.as_text())
@@ -161,8 +143,7 @@ def main() -> int:
     record = {"config": {"devices": n_dev, "vertices_per_proc": 200,
                          "edges_per_vertex": 3, "pair_capacity": 256,
                          "pod_scale_p": POD_SCALE_P,
-                         "pod_scale_pair_capacity":
-                             POD_SCALE_CFG.pair_capacity},
+                         "pod_scale_pair_capacity": 8},
               "topologies": {"flat_c256": big, **pod_bytes},
               "jax_version": jax.__version__}
     if not os.path.exists(BASELINE):

@@ -90,6 +90,31 @@ for cfg_i in (cfg, dataclasses.replace(cfg, exchange_rounds=4)):
 print("hierarchical smoke OK")
 PY
 
+echo "== front door: preset dry-run + end-to-end =="
+python examples/generate_massive.py --preset paper_smoke --dry-run
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python - <<'PY'
+import tempfile
+from repro import api
+
+# auto resolution lands on the sharded executor over the 8 forced devices
+res = api.generate(api.preset("paper_smoke"))
+assert res.plan.execution == "sharded", res.plan.executor
+assert res.stats.emitted_edges + res.stats.dropped_edges \
+    == res.stats.requested_edges
+
+# streamed hub-stress preset into a resumable shard sink: zero drops
+with tempfile.TemporaryDirectory() as d:
+    shards = api.generate(api.preset("hub_stress", sink="shards",
+                                     out_dir=d))
+    assert shards.plan.execution == "streamed"
+    assert shards.stats.dropped_edges == 0, shards.stats
+    from repro.core.storage import read_shards
+    src, dst, man = read_shards(d)
+    assert len(src) == shards.stats.emitted_edges
+    assert "spec_digest" in man["meta"]
+print("front door OK")
+PY
+
 echo "== collective-bytes gate =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python scripts/collective_gate.py

@@ -15,17 +15,13 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.graph import EdgeList
 from repro.runtime import blocking, spmd
+from repro.runtime import topology as topology_lib
 from repro.runtime.topology import Topology
 
 
 def _resolve(mesh: Optional[Mesh], axis_name: str,
              topology: Optional[Topology]) -> tuple[Topology, Mesh]:
-    if topology is None:
-        topology = (Topology.from_mesh(mesh) if mesh is not None
-                    else Topology.flat(spmd.device_count(), axis_name))
-    if mesh is None:
-        mesh = topology.build_mesh()
-    return topology, mesh
+    return topology_lib.resolve(topology, mesh, axis_name)
 
 
 def degree_counts_sharded(edges: EdgeList, mesh: Optional[Mesh] = None,

@@ -33,6 +33,7 @@ from repro.core import rng as rng_lib
 from repro.core.factions import FactionTable, validate_table
 from repro.core.graph import EdgeList, GenStats
 from repro.runtime import blocking, spmd, streaming
+from repro.runtime import topology as topology_lib
 from repro.runtime.topology import Topology
 
 
@@ -375,34 +376,6 @@ def pba_shard_body(rank, faction_row, s, cfg: PBAConfig, num_procs: int,
     return u[0], v[0], dropped, granted[0]
 
 
-def _resolve_topology(topology: Optional[Topology], mesh: Optional[Mesh],
-                      axis_name: str,
-                      default_devices: int) -> tuple[Topology, Mesh]:
-    """Resolve the (topology, mesh) pair a sharded generator runs on.
-
-    Explicit topology wins (mesh built over its axes when absent); an
-    explicit 1-D mesh implies the flat topology over its axes; neither
-    given => flat over ``default_devices``. When both are given their axes
-    must agree — a mesh from one topology with specs from another would
-    silently scramble the blocked layout.
-    """
-    if topology is None:
-        topology = (Topology.from_mesh(mesh) if mesh is not None
-                    else Topology.flat(default_devices, axis_name))
-    if topology.is_host:
-        raise ValueError(
-            "host topology has no device mesh — use generate_pba_host")
-    if mesh is None:
-        mesh = topology.build_mesh()
-    elif (tuple(mesh.axis_names) != topology.axis_names
-          or tuple(int(mesh.shape[n]) for n in mesh.axis_names)
-          != topology.axis_sizes):
-        raise ValueError(
-            f"mesh axes {dict(mesh.shape)} do not match topology "
-            f"{topology.label}")
-    return topology, mesh
-
-
 def _derived_pair_capacity(cfg: PBAConfig, table: FactionTable) -> int:
     """The capacity every generator path uses for (cfg, table) — shared so
     host/sharded/stream runs of the same config agree on the budget."""
@@ -425,7 +398,8 @@ def generate_pba(cfg: PBAConfig, table: FactionTable,
     """
     validate_table(table)
     num_procs = table.num_procs
-    topology, mesh = _resolve_topology(topology, mesh, axis_name, num_procs)
+    topology, mesh = topology_lib.resolve(topology, mesh, axis_name,
+                                          default_devices=num_procs)
     if topology.num_devices != num_procs:
         raise ValueError(
             f"generate_pba runs 1 proc per device: table has {num_procs} "
@@ -484,8 +458,7 @@ def generate_pba_sharded(cfg: PBAConfig, table: FactionTable,
     """
     validate_table(table)
     num_procs = table.num_procs
-    topology, mesh = _resolve_topology(topology, mesh, axis_name,
-                                       len(jax.devices()))
+    topology, mesh = topology_lib.resolve(topology, mesh, axis_name)
     d = topology.num_devices
     lp = topology.lp(num_procs)  # logical procs per device
     pair_capacity = _derived_pair_capacity(cfg, table)

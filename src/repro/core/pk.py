@@ -34,6 +34,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import rng as rng_lib
 from repro.core.graph import EdgeList, GenStats
 from repro.runtime import blocking, spmd
+from repro.runtime import topology as topology_lib
 from repro.runtime.topology import Topology
 
 
@@ -210,11 +211,7 @@ def generate_pk(seed: SeedGraph, cfg: PKConfig,
     device indices) — there is nothing to exchange hierarchically.
     """
     SeedGraph.validate(seed)
-    if topology is None:
-        topology = (Topology.from_mesh(mesh) if mesh is not None
-                    else Topology.flat(len(jax.devices()), axis_name))
-    if mesh is None:
-        mesh = topology.build_mesh()
+    topology, mesh = topology_lib.resolve(topology, mesh, axis_name)
     num_procs = topology.num_devices
     spec = topology.spec_axes
     n, e = pk_sizes(seed, cfg)

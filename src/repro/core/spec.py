@@ -1,0 +1,158 @@
+"""GraphSpec — the single declarative description of a generated graph.
+
+The paper's pitch is a *generator as a service*: a caller asks for "a
+scale-free graph with N vertices and E edges" and the cluster produces it.
+A :class:`GraphSpec` is that request — model, scale, randomness, community
+structure, the device topology to run over, how to execute (in one shot,
+sharded, or streamed out-of-core) and where the edges should land (memory
+or resumable shards). It is a frozen value object: ``repro.api.plan``
+compiles it into an inspectable :class:`~repro.api.GenPlan`, and
+``repro.api.generate`` executes that plan.
+
+Also here: :func:`spec_digest`, the canonical fingerprint of any
+generation config (dataclasses + numpy arrays hashed structurally). The
+shard-manifest resume check folds this digest in, so resuming a shard
+directory with *any* differing spec — even one whose legacy meta fields
+happen to collide — fails loudly instead of interleaving two graphs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Optional, Union
+
+import numpy as np
+
+from repro.core.factions import FactionSpec, FactionTable
+from repro.core.pk import SeedGraph
+from repro.runtime.topology import Topology
+
+MODELS = ("pba", "pk")
+EXECUTIONS = ("auto", "host", "sharded", "streamed")
+SINKS = ("memory", "shards")
+
+
+def _canon(x):
+    """Canonical JSON-able form: dataclasses by field, arrays by content
+    hash (dtype/shape/sha256), containers recursively. Unrecognized types
+    raise — a repr-based fallback would truncate large arrays and hand two
+    different graphs the same fingerprint."""
+    if x is None or isinstance(x, (str, bool, int, float)):
+        return x
+    if isinstance(x, (np.integer, np.floating, np.bool_)):
+        return x.item()
+    if dataclasses.is_dataclass(x) and not isinstance(x, type):
+        return {type(x).__name__:
+                {f.name: _canon(getattr(x, f.name))
+                 for f in dataclasses.fields(x)}}
+    if isinstance(x, (list, tuple)):
+        return [_canon(v) for v in x]
+    if isinstance(x, dict):
+        return {str(k): _canon(v) for k, v in sorted(x.items())}
+    if hasattr(x, "__array__"):  # numpy, jax, and other array-likes
+        a = np.asarray(x)
+        return {"__ndarray__": [str(a.dtype), list(a.shape),
+                                hashlib.sha256(
+                                    np.ascontiguousarray(a).tobytes()
+                                ).hexdigest()]}
+    raise TypeError(
+        f"spec_digest cannot canonicalize {type(x).__name__}: add an "
+        "explicit rule rather than fingerprinting its repr")
+
+
+def spec_digest(*parts) -> str:
+    """Stable 16-hex fingerprint of a generation config.
+
+    Accepts any mix of dataclasses (GraphSpec, PBAConfig, SeedGraph, ...),
+    numpy/JAX arrays, and plain JSON-able values; identical content always
+    produces the identical digest, and any field change — including ones
+    that collapse to the same derived values — changes it.
+    """
+    payload = json.dumps([_canon(p) for p in parts], sort_keys=True)
+    return hashlib.sha256(payload.encode()).hexdigest()[:16]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GraphSpec:
+    """One declarative request = one graph. The front door's input.
+
+    model: ``"pba"`` (parallel Barabási–Albert) or ``"pk"`` (parallel
+      Kronecker).
+
+    PBA scale / knobs (ignored for pk):
+      procs: logical processor count P (the paper ran 1000 MPI ranks).
+      vertices_per_proc, edges_per_vertex: local scale; global graph is
+        ``P * vertices_per_proc`` vertices, ``P * V * k`` edges.
+      factions: community structure — a :class:`FactionSpec` (random
+        draw), an explicit :class:`FactionTable`, ``"block:<size>"``,
+        ``"hub"`` (adversarial hub layout), or None for a default random
+        layout derived from P.
+      interfaction_prob / pair_capacity / exchange_rounds /
+      total_capacity_factor: as on :class:`~repro.core.pba.PBAConfig`.
+      auto_capacity: streamed execution only — size each processor's urn
+        to its observed demand (zero drops, the stream's own deterministic
+        graph) vs. the static device budget (bit-parity with host runs).
+
+    PK scale / knobs (ignored for pba):
+      levels: Kronecker power L.
+      seed_graph: the seed (default: ``star_clique_seed(5)``).
+      noise / delete_prob: per-(edge, level) digit redraw / deletion.
+      slab_edges: streamed execution block size.
+
+    Common:
+      seed: the RNG seed — with the spec, the graph's entire identity.
+      topology: device topology request for sharded execution
+        (``Topology.flat`` / ``Topology.pods``); None = flat over the
+        devices present.
+      execution: ``auto`` (planner picks), ``host`` (P logical procs on
+        one device), ``sharded`` (P = lp * D over the topology), or
+        ``streamed`` (out-of-core host-driven blocks).
+      sink: ``memory`` (EdgeList) or ``shards`` (resumable .npz shards in
+        ``out_dir``).
+      num_shards: shard count when a non-streamed execution writes the
+        shards sink (streamed executions shard per block).
+    """
+
+    model: str
+    # --- PBA ---------------------------------------------------------------
+    procs: int = 0
+    vertices_per_proc: int = 0
+    edges_per_vertex: int = 0
+    factions: Union[FactionSpec, FactionTable, str, None] = None
+    interfaction_prob: float = 0.05
+    pair_capacity: Optional[int] = None
+    exchange_rounds: Optional[int] = None
+    total_capacity_factor: int = 2
+    auto_capacity: bool = True
+    # --- PK ----------------------------------------------------------------
+    levels: int = 0
+    seed_graph: Optional[SeedGraph] = None
+    noise: float = 0.0
+    delete_prob: float = 0.0
+    slab_edges: int = 1 << 20
+    # --- common ------------------------------------------------------------
+    seed: int = 0
+    topology: Optional[Topology] = None
+    execution: str = "auto"
+    sink: str = "memory"
+    out_dir: Optional[str] = None
+    num_shards: int = 8
+
+    # Execution details, not graph identity: host/sharded/auto runs of the
+    # same spec are bit-identical (the parity suite pins this), and the
+    # sink/shard layout only says where edges land — so a resume of the
+    # same graph from a different execution mode must not be rejected.
+    _NON_IDENTITY_FIELDS = ("out_dir", "execution", "sink", "num_shards",
+                            "topology")
+
+    def digest(self) -> str:
+        """Fingerprint of every generation-relevant field (execution mode,
+        topology and sink layout excluded — they route the same bits)."""
+        fields = {f.name: getattr(self, f.name)
+                  for f in dataclasses.fields(self)
+                  if f.name not in self._NON_IDENTITY_FIELDS}
+        return spec_digest(fields)
+
+    def replace(self, **changes) -> "GraphSpec":
+        return dataclasses.replace(self, **changes)

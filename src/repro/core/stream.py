@@ -178,8 +178,13 @@ class PBAStream:
         # (storage._check_resume) compares this dict, so any omitted knob
         # would let shards of two different graphs interleave silently.
         # The faction table is fingerprinted (two tables with identical cfg
-        # still generate different graphs).
+        # still generate different graphs), and spec_digest covers the
+        # *full* (cfg, table, auto_capacity) spec — legacy fields can
+        # collide on derived values (e.g. two (pair_capacity,
+        # exchange_rounds) pairs with the same round_capacity), and a
+        # collision must not let a resume silently accept a different spec.
         import hashlib
+        from repro.core.spec import spec_digest
         digest = hashlib.sha256(
             self.table.procs.tobytes() + self.table.s.tobytes()
         ).hexdigest()[:16]
@@ -192,7 +197,9 @@ class PBAStream:
                 "auto_capacity": self._auto_capacity,
                 "table_digest": digest,
                 "round_capacity": self.round_cap,
-                "urn_budget": int(self._t_cap.max())}
+                "urn_budget": int(self._t_cap.max()),
+                "spec_digest": spec_digest(self.cfg, self.table,
+                                           self._auto_capacity)}
 
     def block(self, i: int) -> tuple[np.ndarray, np.ndarray]:
         """Edges resolved in round ``i``: request ranks [i*C_r, (i+1)*C_r)."""
@@ -249,10 +256,17 @@ class PKStream:
         self._t = jnp.arange(slab_edges, dtype=jnp.int32)
 
     def meta(self) -> dict:
+        # spec_digest covers the seed graph's actual edge arrays: two seeds
+        # with the same (n0, e0) but different edges produce the same
+        # legacy meta and manifest shapes, and only the digest stops a
+        # resume from interleaving their shards.
+        from repro.core.spec import spec_digest
         return {"generator": "pk", "seed": self.cfg.seed,
                 "levels": self.cfg.levels, "noise": self.cfg.noise,
                 "delete_prob": self.cfg.delete_prob,
-                "slab_edges": self.slab_edges}
+                "slab_edges": self.slab_edges,
+                "spec_digest": spec_digest(self.seed, self.cfg,
+                                           self.slab_edges)}
 
     def block(self, i: int) -> tuple[np.ndarray, np.ndarray]:
         if not 0 <= i < self.num_blocks:
@@ -273,6 +287,16 @@ class PKStream:
             yield EdgeBlock(i, src, dst)
 
 
+def stream_stats(stream, emitted: int) -> GenStats:
+    """The one stats contract for a drained stream (shards or memory)."""
+    return GenStats(requested_edges=stream.requested_edges,
+                    emitted_edges=emitted,
+                    dropped_edges=stream.requested_edges - emitted,
+                    num_vertices=stream.num_vertices,
+                    exchange_rounds=stream.exchange_rounds,
+                    pair_capacity=getattr(stream, "pair_capacity", 0))
+
+
 def stream_to_shards(stream, out_dir: str,
                      meta: Optional[dict] = None) -> tuple[dict, GenStats]:
     """Drive a stream's blocks into the resumable shard writer.
@@ -287,11 +311,4 @@ def stream_to_shards(stream, out_dir: str,
     for i in writer.missing():
         src, dst = stream.block(i)
         writer.write_block(i, src, dst)
-    emitted = writer.edges_written
-    stats = GenStats(requested_edges=stream.requested_edges,
-                     emitted_edges=emitted,
-                     dropped_edges=stream.requested_edges - emitted,
-                     num_vertices=stream.num_vertices,
-                     exchange_rounds=stream.exchange_rounds,
-                     pair_capacity=getattr(stream, "pair_capacity", 0))
-    return writer.manifest, stats
+    return writer.manifest, stream_stats(stream, writer.edges_written)

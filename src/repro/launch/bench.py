@@ -1,0 +1,45 @@
+"""Compile-only harness for the sharded PBA exchange program.
+
+Shared by the collective-bytes CI gate (scripts/collective_gate.py) and
+the lp x topology sweep (benchmarks/hierarchical_exchange.py): both need
+the *compiled* exchange for a resolved :class:`repro.api.GenPlan` — to
+read cost analysis and HLO collective stats — without running it. One
+definition keeps the gate and the benchmark measuring the same program.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.pba import pba_logical_block
+from repro.runtime import blocking, spmd
+
+
+def compile_sharded_pba(pl):
+    """(jitted_fn, example_args) for a sharded-execution PBA plan.
+
+    ``fn.lower(*args).compile()`` yields the compiled program; calling
+    ``fn(*args)`` runs it.
+    """
+    cfg, table, topo = pl.config, pl.table, pl.topology
+    num_procs, lp, d = pl.num_procs, pl.lp, topo.num_devices
+    mesh = topo.build_mesh()
+    spec = topo.spec_axes
+
+    def body(procs_blk, s_blk):
+        ranks = blocking.logical_ranks(lp, topo)
+        u, v, dropped, _, rounds = pba_logical_block(
+            ranks, procs_blk[0], s_blk[0], cfg, num_procs,
+            pl.pair_capacity, topo)
+        return u[None], v[None], dropped[None], rounds[None]
+
+    fn = jax.jit(spmd.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(spec, None, None), P(spec, None)),
+        out_specs=(P(spec, None, None), P(spec, None, None), P(spec),
+                   P(spec)),
+        check_vma=False))
+    procs = jnp.asarray(table.procs).reshape(d, lp, table.max_s)
+    s = jnp.asarray(table.s).reshape(d, lp)
+    return fn, (procs, s)

@@ -31,10 +31,10 @@ from repro.runtime.spmd import (api_info, axis_index, cost_analysis,
                                 device_count, device_kind,
                                 device_memory_bytes, ensure_mesh, make_mesh,
                                 make_proc_mesh, mesh_size, shard_map)
-from repro.runtime.topology import Topology
+from repro.runtime.topology import Topology, resolve
 
 __all__ = [
-    "spmd", "blocking", "streaming", "topology", "Topology",
+    "spmd", "blocking", "streaming", "topology", "Topology", "resolve",
     "shard_map", "make_mesh", "make_proc_mesh", "ensure_mesh", "mesh_size",
     "api_info", "cost_analysis", "axis_index", "device_count", "device_kind",
     "device_memory_bytes",

@@ -153,3 +153,42 @@ class Topology:
                 f"topology {self.label} needs {n} devices, have {len(devs)}")
         return Mesh(np.array(devs[:n]).reshape(self.axis_sizes),
                     self.axis_names)
+
+
+def resolve(topology: Optional[Topology], mesh: Optional[Mesh] = None,
+            axis_name: str = "proc",
+            default_devices: Optional[int] = None
+            ) -> Tuple[Topology, Mesh]:
+    """Resolve the (topology, mesh) pair a distributed program runs on.
+
+    The one shared resolution rule (used by core/pba.py, core/pk.py,
+    core/distributed_analysis.py and the api planner): an explicit topology
+    wins (its mesh is built when absent); an explicit mesh implies the
+    topology of its axes; neither given => flat over ``default_devices``
+    (the process's device count when that is None too). When both are
+    given their axes must agree — a mesh from one topology with partition
+    specs from another would silently scramble the blocked layout. The
+    host topology has no device mesh and is rejected: host-path callers
+    never need a mesh.
+    """
+    if topology is None:
+        if mesh is not None:
+            topology = Topology.from_mesh(mesh)
+        else:
+            if default_devices is None:
+                from repro.runtime import spmd
+                default_devices = spmd.device_count()
+            topology = Topology.flat(default_devices, axis_name)
+    if topology.is_host:
+        raise ValueError(
+            "host topology has no device mesh — run the host-path "
+            "generator (generate_*_host) instead")
+    if mesh is None:
+        mesh = topology.build_mesh()
+    elif (tuple(mesh.axis_names) != topology.axis_names
+          or tuple(int(mesh.shape[n]) for n in mesh.axis_names)
+          != topology.axis_sizes):
+        raise ValueError(
+            f"mesh axes {dict(mesh.shape)} do not match topology "
+            f"{topology.label}")
+    return topology, mesh

@@ -16,9 +16,8 @@ from typing import Iterator, Optional
 
 import numpy as np
 
-from repro.core import (EdgeList, FactionSpec, PBAConfig, PKConfig,
-                        generate_pba_host, generate_pk_host, make_factions,
-                        star_clique_seed, to_csr)
+from repro import api
+from repro.core import EdgeList, FactionSpec, GraphSpec, to_csr
 
 
 @dataclasses.dataclass
@@ -45,18 +44,18 @@ class WalkCorpus:
         c = self.cfg
         if c.generator == "pba":
             vpp = max(c.num_vertices // c.logical_procs, 1)
-            table = make_factions(
-                c.logical_procs,
-                FactionSpec(max(c.logical_procs // 2, 1), 2,
-                            max(c.logical_procs // 2, 2), seed=c.seed))
-            edges, _ = generate_pba_host(
-                PBAConfig(vertices_per_proc=vpp,
-                          edges_per_vertex=c.edges_per_vertex,
-                          seed=c.seed), table)
+            spec = GraphSpec(
+                model="pba", procs=c.logical_procs, vertices_per_proc=vpp,
+                edges_per_vertex=c.edges_per_vertex, seed=c.seed,
+                factions=FactionSpec(max(c.logical_procs // 2, 1), 2,
+                                     max(c.logical_procs // 2, 2),
+                                     seed=c.seed),
+                execution="host")
+            edges = api.generate(spec).edges
         elif c.generator == "pk":
-            edges, _ = generate_pk_host(star_clique_seed(5),
-                                        PKConfig(levels=c.pk_levels,
-                                                 noise=0.05, seed=c.seed))
+            spec = GraphSpec(model="pk", levels=c.pk_levels, noise=0.05,
+                             seed=c.seed, execution="host")
+            edges = api.generate(spec).edges
         else:
             self.indptr = self.indices = None
             self.n = c.vocab_size

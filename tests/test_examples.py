@@ -32,6 +32,15 @@ def test_generate_massive_single_device(tmp_path):
     assert "PBA:" in out and "PK:" in out and "edges/s" in out
 
 
+def test_generate_massive_preset_dry_run():
+    """--preset + --dry-run prints the resolved plan without generating."""
+    out = _run([os.path.join(REPO, "examples", "generate_massive.py"),
+                "--preset", "paper_smoke", "--dry-run"], timeout=120)
+    assert "GraphSpec[pba]" in out
+    assert "executor:" in out and "topology:" in out
+    assert "pair_capacity=" in out and "bytes:" in out
+
+
 def test_train_graph_lm_tiny(tmp_path):
     out = _run([os.path.join(REPO, "examples", "train_graph_lm.py"),
                 "--steps", "12", "--batch", "4", "--seq", "64",

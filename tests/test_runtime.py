@@ -16,7 +16,8 @@ from repro.runtime import Topology, blocking, spmd
 
 from helpers import run_with_devices
 
-SRC = pathlib.Path(__file__).resolve().parents[1] / "src"
+REPO = pathlib.Path(__file__).resolve().parents[1]
+SRC = REPO / "src"
 
 
 # --- API hygiene ------------------------------------------------------------
@@ -50,6 +51,26 @@ def test_no_raw_shard_map_outside_runtime():
     assert not offenders, (
         "raw shard_map/mesh/collective APIs outside repro.runtime (route "
         "through repro.runtime.spmd / blocking):\n" + "\n".join(offenders))
+
+
+def test_front_door_only_outside_src():
+    """examples/, benchmarks/ and scripts/ must go through the repro.api
+    front door (GraphSpec -> plan -> generate): the legacy per-model entry
+    points and stream drivers are internal executors, not public surface."""
+    banned = re.compile(
+        r"\b(generate_pba_sharded|generate_pba_host|generate_pk_host"
+        r"|PBAStream|PKStream|stream_to_shards)\b")
+    offenders = []
+    for d in ("examples", "benchmarks", "scripts"):
+        for path in sorted((REPO / d).rglob("*.py")):
+            rel = path.relative_to(REPO)
+            for lineno, line in enumerate(path.read_text().splitlines(), 1):
+                if banned.search(line):
+                    offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    assert not offenders, (
+        "legacy generator entry points outside src/ (build a "
+        "repro.api.GraphSpec and go through plan/generate):\n"
+        + "\n".join(offenders))
 
 
 def test_api_info_resolved():
@@ -149,6 +170,23 @@ def test_topology_mesh_roundtrip():
     assert Topology.from_mesh(mesh) == flat
     with pytest.raises(ValueError):  # more devices than exist
         Topology.pods(64, 64).build_mesh()
+
+
+def test_topology_resolve_shared():
+    """The one shared (topology, mesh) resolution rule (runtime.resolve)."""
+    from repro.runtime import topology as topo_mod
+    t, mesh = topo_mod.resolve(None, None)       # flat over all devices
+    assert t == Topology.flat(len(jax.devices()))
+    assert tuple(mesh.axis_names) == ("proc",)
+    flat = Topology.flat(1)
+    t2, m2 = topo_mod.resolve(flat)              # topology wins, mesh built
+    assert t2 is flat and tuple(m2.axis_names) == ("proc",)
+    t3, _ = topo_mod.resolve(None, m2)           # mesh implies topology
+    assert t3 == flat
+    with pytest.raises(ValueError):              # host has no device mesh
+        topo_mod.resolve(Topology.host())
+    with pytest.raises(ValueError):              # axes must agree
+        topo_mod.resolve(Topology.pods(1, 1), m2)
 
 
 def test_make_production_mesh_device_aware():

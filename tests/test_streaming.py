@@ -19,7 +19,7 @@ import numpy as np
 import pytest
 import jax.numpy as jnp
 
-from repro.core import (PBAConfig, PKConfig, PBAStream, PKStream,
+from repro.core import (PBAConfig, PKConfig, PBAStream, PKStream, SeedGraph,
                         degree_counts, fit_power_law, generate_pba_host,
                         hub_factions, star_clique_seed, stream_to_shards)
 from repro.core.storage import read_shards
@@ -214,6 +214,41 @@ def test_stream_resume_rejects_different_generator(tmp_path):
     with pytest.raises(ValueError, match="meta mismatch"):
         stream_to_shards(PKStream(seed, PKConfig(levels=5, seed=4),
                                   slab_edges=1000), str(tmp_path))
+
+
+def test_stream_resume_rejects_same_shape_different_seed_graph(tmp_path):
+    """Two seed graphs with identical (n0, e0) — so identical legacy meta,
+    num_vertices and num_shards — still define different graphs: only the
+    full spec digest in the manifest fingerprint catches the swap."""
+    s1 = star_clique_seed(4)
+    s2 = SeedGraph(s1.v.copy(), s1.u.copy(), s1.num_vertices)  # reversed
+    cfg = PKConfig(levels=5, seed=3)
+    m1 = PKStream(s1, cfg, slab_edges=1000).meta()
+    m2 = PKStream(s2, cfg, slab_edges=1000).meta()
+    legacy = {k: v for k, v in m1.items() if k != "spec_digest"}
+    assert legacy == {k: v for k, v in m2.items() if k != "spec_digest"}
+    assert m1["spec_digest"] != m2["spec_digest"]
+    stream_to_shards(PKStream(s1, cfg, slab_edges=1000), str(tmp_path))
+    with pytest.raises(ValueError, match="meta mismatch"):
+        stream_to_shards(PKStream(s2, cfg, slab_edges=1000), str(tmp_path))
+
+
+def test_stream_resume_rejects_colliding_exchange_config(tmp_path):
+    """(pair_capacity=16, rounds=4) and (8, 2) collide on every legacy meta
+    field (same C_r, same auto urn budget) — resuming across them must
+    still fail loudly on the folded-in spec digest."""
+    table = hub_factions(4)
+    cfg_a = PBAConfig(vertices_per_proc=100, edges_per_vertex=3, seed=3,
+                      pair_capacity=16, exchange_rounds=4)
+    cfg_b = dataclasses.replace(cfg_a, pair_capacity=8, exchange_rounds=2)
+    m_a = PBAStream(cfg_a, table).meta()
+    m_b = PBAStream(cfg_b, table).meta()
+    legacy = {k: v for k, v in m_a.items() if k != "spec_digest"}
+    assert legacy == {k: v for k, v in m_b.items() if k != "spec_digest"}
+    assert m_a["spec_digest"] != m_b["spec_digest"]
+    stream_to_shards(PBAStream(cfg_a, table), str(tmp_path))
+    with pytest.raises(ValueError, match="meta mismatch"):
+        stream_to_shards(PBAStream(cfg_b, table), str(tmp_path))
 
 
 def test_stream_resume_regenerates_only_missing(tmp_path):

@@ -12,13 +12,14 @@ import traceback
 def main() -> None:
     from benchmarks import (ablations, fig3_weak_scaling,
                             fig4_degree_distribution, fig5_communities,
-                            streaming_exchange, table1_generation_time,
-                            table2_path_length)
+                            streamed_sharded, streaming_exchange,
+                            table1_generation_time, table2_path_length)
     print("name,us_per_call,derived")
     failures = []
     for mod in (table1_generation_time, fig3_weak_scaling,
                 fig4_degree_distribution, table2_path_length,
-                fig5_communities, ablations, streaming_exchange):
+                fig5_communities, ablations, streaming_exchange,
+                streamed_sharded):
         try:
             mod.run()
         except Exception:  # noqa: BLE001

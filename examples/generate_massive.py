@@ -12,7 +12,9 @@ shard_map collectives:
 Demonstrates: distributed PBA + PK, the multi-round streaming exchange
 (--exchange-rounds: zero dropped edges with a 1/R-size exchange buffer),
 out-of-core generation straight to resumable shards (--out-dir: the graph
-only has to fit on disk), preset scenarios (--preset paper_smoke,
+only has to fit on disk; on D > 1 devices the stream runs device-sharded
+— combine with --pods for the hierarchical exchange, and --no-overlap to
+serialize the double-buffered rounds), preset scenarios (--preset paper_smoke,
 paper_1b_5b, ...), plan inspection (--dry-run), generation-state
 checkpointing (seed + partition is the whole state — regeneration beats
 storage at >100M edges/s), and restart.
@@ -37,11 +39,9 @@ def build_specs(args, state, n_dev):
     out_of_core = args.out_dir is not None
     topology = None
     if args.pods:
-        if out_of_core:
-            raise SystemExit(
-                "--pods selects the on-device hierarchical exchange; the "
-                "out-of-core stream driver (--out-dir) runs the host path "
-                "— drop one of the two flags.")
+        # Works in-memory (hierarchical single-shot exchange) and
+        # out-of-core (the device-sharded stream drives the same two-hop
+        # transpose per round).
         from repro.runtime import Topology
         rows, cols = (int(x) for x in args.pods.lower().split("x"))
         if rows * cols != n_dev:
@@ -54,7 +54,7 @@ def build_specs(args, state, n_dev):
         vertices_per_proc=state["vpp"], edges_per_vertex=state["k"],
         interfaction_prob=0.05, pair_capacity=args.pair_capacity,
         exchange_rounds=args.exchange_rounds, seed=state["seed"],
-        topology=topology,
+        topology=topology, overlap=args.overlap,
         execution="streamed" if out_of_core else "auto",
         sink="shards" if out_of_core else "memory",
         out_dir=os.path.join(args.out_dir, "pba") if out_of_core else None)
@@ -97,6 +97,12 @@ def main() -> None:
                          "per-slab PK blocks to resumable shards here "
                          "instead of materializing edge lists")
     ap.add_argument("--pk-slab-edges", type=int, default=1 << 20)
+    ap.add_argument("--overlap", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="sharded-streamed out-of-core mode: double-buffer "
+                         "rounds (dispatch round r+1's device grant while "
+                         "round r's block is written back); --no-overlap "
+                         "serializes them for comparison")
     ap.add_argument("--ckpt", default="/tmp/repro_gen_ckpt.json")
     args = ap.parse_args()
     n_dev = len(jax.devices())
@@ -105,6 +111,7 @@ def main() -> None:
         spec = api.preset(args.preset)
         if args.out_dir:
             spec = spec.replace(execution="streamed", sink="shards",
+                                overlap=args.overlap,
                                 out_dir=os.path.join(args.out_dir,
                                                      spec.model))
         pl = api.plan(spec)
@@ -138,9 +145,12 @@ def main() -> None:
         # The checkpointed logical-proc count defines the graph; it cannot
         # be re-derived without generating a *different* graph, so restarts
         # on hardware that cannot host it must fail loudly, not crash deep
-        # inside split_logical. Out-of-core mode is exempt: the stream
-        # driver runs the host path, which handles any logical-proc count.
-        if state["procs"] % n_dev and not args.out_dir:
+        # inside split_logical. Out-of-core mode without an explicit
+        # topology is exempt: the planner falls back to the host-driven
+        # stream, which handles any logical-proc count (and emits the
+        # identical blocks). An explicit --pods topology has no fallback,
+        # so it keeps the loud checkpoint-aware error.
+        if state["procs"] % n_dev and (args.pods or not args.out_dir):
             raise SystemExit(
                 f"checkpoint {args.ckpt} was written for "
                 f"{state['procs']} logical processors, which does not "

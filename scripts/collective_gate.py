@@ -3,14 +3,16 @@
 Compiles the real sharded PBA exchange program on the forced-host-device
 mesh (scenario configuration resolved through the ``repro.api`` front
 door: GraphSpec -> plan) and reads its total 'bytes accessed' through the
-version-portable ``repro.runtime.spmd.cost_analysis`` shim. Three
+version-portable ``repro.runtime.spmd.cost_analysis`` shim. Four
 mechanical checks:
 
   1. Capacity scaling (flat topology): shrinking ``pair_capacity`` 4x must
      shrink the compiled program's bytes accessed — if the exchange buffers
      ever stop depending on the capacity knob (e.g. an accidental full-size
      materialization sneaks in), this inequality breaks immediately and
-     version-independently.
+     version-independently. The same inequality holds for the
+     device-sharded stream's per-round program over the rounds knob (1b):
+     its buffers are (lp, P, C_r) with C_r = ceil(C / R).
   2. Hierarchical locality at pod scale: at P = 1000 logical ranks over the
      2-D pods topologies, the two-hop transpose's *cross-pod wire bytes*
      (the (g-1)/g fraction of the strided-replica-group all_to_alls — what
@@ -42,7 +44,8 @@ import jax
 from repro import api
 from repro.api import GraphSpec
 from repro.core import FactionSpec
-from repro.launch.bench import compile_sharded_pba
+from repro.launch.bench import (compile_sharded_pba,
+                                compile_sharded_stream_round)
 from repro.launch.hlo_stats import all_to_all_span_bytes
 from repro.runtime import Topology, spmd
 
@@ -103,6 +106,30 @@ def main() -> int:
               file=sys.stderr)
         return 1
 
+    # --- 1b: streamed round buffers scale with 1/R --------------------------
+    # One round of the device-sharded stream carries (lp, P, C_r) buffers;
+    # doubling the configured rounds must shrink the compiled round
+    # program. If it stops scaling, a full-capacity buffer is being
+    # materialized inside the per-round path.
+    def stream_round_bytes(rounds: int) -> float:
+        pl = api.plan(_spec(n_dev, 200, 3, 256, flat).replace(
+            execution="streamed", exchange_rounds=rounds))
+        assert pl.executor == "pba_stream_sharded", pl.executor
+        fn, args = compile_sharded_stream_round(pl)
+        return float(spmd.cost_analysis(
+            fn.lower(*args).compile()).get("bytes accessed", 0.0))
+
+    stream_r2 = stream_round_bytes(2)
+    stream_r8 = stream_round_bytes(8)
+    print(f"collective gate: stream round bytes R=2 -> {stream_r2:.0f}, "
+          f"R=8 -> {stream_r8:.0f}")
+    if stream_r8 >= stream_r2:
+        print("collective gate FAILED: sharded-stream round bytes do not "
+              f"scale with rounds (R=8: {stream_r8:.0f} >= R=2: "
+              f"{stream_r2:.0f}) — the per-round program is materializing "
+              "a full-capacity buffer", file=sys.stderr)
+        return 1
+
     # --- 2: pod-scale hierarchical locality at P = 1000 ---------------------
     topos = gate_topologies(n_dev)
     if POD_SCALE_P % n_dev:
@@ -144,7 +171,9 @@ def main() -> int:
                          "edges_per_vertex": 3, "pair_capacity": 256,
                          "pod_scale_p": POD_SCALE_P,
                          "pod_scale_pair_capacity": 8},
-              "topologies": {"flat_c256": big, **pod_bytes},
+              "topologies": {"flat_c256": big,
+                             "flat_stream_round_r8": stream_r8,
+                             **pod_bytes},
               "jax_version": jax.__version__}
     if not os.path.exists(BASELINE):
         with open(BASELINE, "w") as f:

@@ -81,6 +81,8 @@ class GenPlan:
     config: Union[PBAConfig, PKConfig]
     table: Optional[FactionTable] = None
     seed_graph: Optional[SeedGraph] = None
+    block_bytes: int = 0        # streamed: per-round gathered block
+    overlap_bytes: int = 0      # streamed: extra in-flight double-buffer
 
     def describe(self) -> str:
         """Human-readable resolved plan (the --dry-run output)."""
@@ -107,6 +109,21 @@ class GenPlan:
                 f"  expansion: levels={self.config.levels}, "
                 f"seed {self.seed_graph.num_vertices}v/"
                 f"{self.seed_graph.num_edges}e, zero communication")
+        if self.execution == "streamed":
+            lines.append(
+                f"  stream:    block ~{_fmt_bytes(self.block_bytes)}/round"
+                + (f", overlap buffer ~{_fmt_bytes(self.overlap_bytes)}"
+                   if self.overlap_bytes else ", overlap off"))
+            if self.model == "pba" and self.spec.auto_capacity:
+                # The auto urn budget is pow2(max per-provider demand),
+                # known only at run time; the static budget stands in for
+                # the estimates below and can understate pool memory
+                # badly on skewed (hub) layouts.
+                lines.append(
+                    "  caveat:    auto_capacity pools are demand-sized at "
+                    "run time (worst case ~P*E on hub layouts); byte "
+                    "estimates assume the static urn budget — pin "
+                    "total_capacity_factor for exact planning")
         lines.append(
             f"  bytes:     device ~{_fmt_bytes(self.device_bytes)}, "
             f"host ~{_fmt_bytes(self.host_bytes)}, "
@@ -172,13 +189,8 @@ def _resolve_execution(spec: GraphSpec, divisible: bool) -> str:
     topo = spec.topology
     if ex == "auto":
         if spec.sink == "shards":
-            if topo is not None and not topo.is_host:
-                raise ValueError(
-                    f"sink='shards' resolves to streamed execution, which "
-                    f"drives the host path and cannot run over device "
-                    f"topology {topo.label}; use execution='sharded' with "
-                    "sink='shards' to generate on-device and then write "
-                    "shards, or drop the topology")
+            # streamed covers both drivers: the planner picks the
+            # device-sharded stream whenever a device topology is usable.
             return "streamed"
         if topo is not None and topo.is_host:
             return "host"
@@ -194,11 +206,6 @@ def _resolve_execution(spec: GraphSpec, divisible: bool) -> str:
         raise ValueError(
             "sharded execution needs a device topology, got "
             "Topology.host(); use execution='host'")
-    if ex == "streamed" and topo is not None and not topo.is_host:
-        raise ValueError(
-            f"streamed execution drives the host path; it cannot run over "
-            f"device topology {topo.label} — drop the topology or use "
-            "execution='sharded'")
     return ex
 
 
@@ -217,6 +224,28 @@ def _device_topology(spec: GraphSpec,
             f"topology {topo.label} needs {topo.num_devices} devices but "
             f"only {avail} are present")
     return topo, lp
+
+
+def _streamed_pba_topology(spec: GraphSpec,
+                           num_procs: int) -> tuple[Topology, int, str]:
+    """(topology, lp, executor) for a streamed PBA plan.
+
+    Streamed execution runs device-sharded (``PBAShardedStream``: the
+    exchange on the mesh, edges out-of-core) whenever a device topology is
+    usable — an explicit non-host topology, or D > 1 present devices that
+    P divides. The host-driven stream remains the single-device fallback,
+    and ``topology=Topology.host()`` requests it explicitly.
+    """
+    topo = spec.topology
+    if topo is not None:
+        if topo.is_host:
+            return Topology.host(), num_procs, "pba_stream"
+        topo, lp = _device_topology(spec, num_procs)
+        return topo, lp, "pba_stream_sharded"
+    d = spmd.device_count()
+    if d > 1 and num_procs % d == 0:
+        return Topology.flat(d), num_procs // d, "pba_stream_sharded"
+    return Topology.host(), num_procs, "pba_stream"
 
 
 def _plan_pba(spec: GraphSpec) -> GenPlan:
@@ -242,10 +271,11 @@ def _plan_pba(spec: GraphSpec) -> GenPlan:
         topo, lp = _device_topology(spec, p)
         executor = ("generate_pba" if lp == 1 and topo.num_devices == p
                     else "generate_pba_sharded")
+    elif execution == "streamed":
+        topo, lp, executor = _streamed_pba_topology(spec, p)
     else:
         topo, lp = Topology.host(), p
-        executor = ("pba_stream" if execution == "streamed"
-                    else "generate_pba_host")
+        executor = "generate_pba_host"
 
     pair_capacity = pba_lib._derived_pair_capacity(cfg, table)
     rounds = cfg.exchange_rounds or 1
@@ -256,12 +286,32 @@ def _plan_pba(spec: GraphSpec) -> GenPlan:
 
     # Rough working sets (int32 everywhere). Sharded/host: each device
     # holds its lp-block of edges, counts, one round buffer, and pools.
+    # (Streamed auto_capacity pools are demand-sized at run time; the
+    # static budget stands in here — plan() never runs phase 1.)
     per_proc = 4 * (4 * e + p + p * c_r + (e + t_cap))
+    block_bytes = overlap_bytes = 0
     if execution == "streamed":
-        # phase 1 runs vmapped over all P on one device; urns resolve one
-        # proc at a time; the host keeps O(edges) tags/ranks/pools.
-        device_bytes = 4 * (2 * p * e + p * p) + 4 * (e + t_cap)
-        host_bytes = 4 * 4 * p * e
+        block_cap = pba_lib.stream_block_capacity(e, p, c_r)
+        block_bytes = 8 * p * block_cap  # gathered (u, v) block per round
+        if executor == "pba_stream_sharded":
+            # Resident per-device state: tags + ranks (2E), pool
+            # (E + t_cap), demand row (P), double round buffers
+            # (emit + recv), and the compacted block output — per
+            # *logical proc*, times the lp block the device hosts.
+            device_bytes = 4 * lp * (3 * e + t_cap + p + 2 * p * c_r
+                                     + 2 * block_cap)
+            host_bytes = block_bytes
+            if spec.overlap:
+                # Double buffering keeps a second block in flight: its
+                # device output plus the host copy being written back.
+                overlap_bytes = 2 * block_bytes
+                host_bytes += block_bytes
+        else:
+            # Host-driven stream: phase 1 runs vmapped over all P on one
+            # device; urns resolve one proc at a time; the host keeps
+            # O(edges) tags/ranks/pools.
+            device_bytes = 4 * (2 * p * e + p * p) + 4 * (e + t_cap)
+            host_bytes = 4 * 4 * p * e
     else:
         device_bytes = lp * per_proc
         host_bytes = 8 * requested if spec.sink == "memory" else 0
@@ -275,7 +325,8 @@ def _plan_pba(spec: GraphSpec) -> GenPlan:
                    exchange_rounds=rounds, round_capacity=c_r,
                    urn_budget=t_cap, device_bytes=device_bytes,
                    host_bytes=host_bytes, disk_bytes=disk_bytes,
-                   config=cfg, table=table)
+                   config=cfg, table=table, block_bytes=block_bytes,
+                   overlap_bytes=overlap_bytes)
 
 
 def _plan_pk(spec: GraphSpec) -> GenPlan:
@@ -291,6 +342,13 @@ def _plan_pk(spec: GraphSpec) -> GenPlan:
             f"n0^L = {n} exceeds int32 vertex-id space "
             f"(n0={seed_graph.num_vertices}, L={cfg.levels})")
     execution = _resolve_execution(spec, divisible=True)
+    if execution == "streamed" and spec.topology is not None \
+            and not spec.topology.is_host:
+        raise ValueError(
+            f"pk streamed execution is host-driven (slabs are already "
+            f"communication-free); it cannot run over device topology "
+            f"{spec.topology.label} — use execution='sharded' for "
+            "on-device expansion or drop the topology")
     if execution == "sharded":
         topo, lp = _device_topology(spec)
         num_procs = topo.num_devices
@@ -310,6 +368,8 @@ def _plan_pk(spec: GraphSpec) -> GenPlan:
     device_bytes = 4 * chunk * (2 * cfg.levels + 4)
     host_bytes = 8 * e if spec.sink == "memory" else 8 * chunk
     disk_bytes = 8 * e if spec.sink == "shards" else 0
+    block_bytes = 8 * min(spec.slab_edges, e) \
+        if execution == "streamed" else 0
     return GenPlan(spec=spec, model="pk", execution=execution,
                    sink=spec.sink, executor=executor, topology=topo,
                    num_procs=num_procs, lp=lp, num_vertices=n,
@@ -317,7 +377,7 @@ def _plan_pk(spec: GraphSpec) -> GenPlan:
                    round_capacity=0, urn_budget=0,
                    device_bytes=device_bytes, host_bytes=host_bytes,
                    disk_bytes=disk_bytes, config=cfg,
-                   seed_graph=seed_graph)
+                   seed_graph=seed_graph, block_bytes=block_bytes)
 
 
 def plan(spec: GraphSpec) -> GenPlan:
@@ -340,13 +400,28 @@ def plan(spec: GraphSpec) -> GenPlan:
 
 # --- generate -----------------------------------------------------------------
 
-def _edges_from_stream(stream) -> tuple[EdgeList, GenStats]:
-    """Drain a stream's blocks into one in-memory EdgeList + stats."""
+def _edges_from_stream(stream, overlap: bool = True
+                       ) -> tuple[EdgeList, GenStats]:
+    """Drain a stream's blocks into one in-memory EdgeList + stats.
+
+    Device-sharded streams are drained double-buffered (block i+1's
+    device round in flight while block i is gathered), same as the shard
+    sink."""
     import jax.numpy as jnp
     srcs, dsts = [], []
-    for block in stream.iter_blocks():
-        srcs.append(block.src)
-        dsts.append(block.dst)
+    if hasattr(stream, "dispatch_block"):
+        def gather(i, handle):
+            src, dst = stream.gather_block(handle)
+            srcs.append(src)
+            dsts.append(dst)
+
+        streaming.drive_rounds(range(stream.num_blocks),
+                               stream.dispatch_block, gather,
+                               overlap=overlap)
+    else:
+        for block in stream.iter_blocks():
+            srcs.append(block.src)
+            dsts.append(block.dst)
     src = np.concatenate(srcs) if srcs else np.empty(0, np.int32)
     dst = np.concatenate(dsts) if dsts else np.empty(0, np.int32)
     edges = EdgeList(src=jnp.asarray(src), dst=jnp.asarray(dst),
@@ -356,6 +431,10 @@ def _edges_from_stream(stream) -> tuple[EdgeList, GenStats]:
 
 def _make_stream(pl: GenPlan):
     if pl.model == "pba":
+        if pl.executor == "pba_stream_sharded":
+            return stream_lib.PBAShardedStream(
+                pl.config, pl.table, topology=pl.topology,
+                auto_capacity=pl.spec.auto_capacity)
         return stream_lib.PBAStream(pl.config, pl.table,
                                     auto_capacity=pl.spec.auto_capacity)
     return stream_lib.PKStream(pl.seed_graph, pl.config,
@@ -377,10 +456,10 @@ def generate(plan_or_spec: Union[GenPlan, GraphSpec]) -> GenResult:
         stream = _make_stream(pl)
         if pl.sink == "shards":
             manifest, stats = stream_lib.stream_to_shards(
-                stream, spec.out_dir)
+                stream, spec.out_dir, overlap=spec.overlap)
             return GenResult(plan=pl, stats=stats, manifest=manifest,
                              out_dir=spec.out_dir)
-        edges, stats = _edges_from_stream(stream)
+        edges, stats = _edges_from_stream(stream, overlap=spec.overlap)
         return GenResult(plan=pl, stats=stats, edges=edges)
 
     if pl.model == "pba":

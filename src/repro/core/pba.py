@@ -361,6 +361,75 @@ def _streamed_exchange2(a, occ, counts, recv_counts, ranks, cfg: PBAConfig,
     return v, granted, rounds
 
 
+def pba_stream_setup_block(ranks, procs_blk, s_blk, cfg: PBAConfig,
+                           num_procs: int, topo: Topology):
+    """Device block of the sharded stream's setup: phase 1 + exchange 1.
+
+    Runs once per generation; the per-round grant
+    (:func:`pba_stream_round_block`) replays the exchange-2 rounds against
+    the returned state. Returns (a (lp, E) processor tags, occ (lp, E)
+    request ranks, recv_counts (lp, P) provider-side demand) for this
+    device's lp logical processors — all of which stay resident on the
+    device across rounds; only the per-round compacted edge block ever
+    travels to the host.
+    """
+    a, counts = blocking.map_logical(
+        lambda r, fr, ss: _phase1(r, fr, ss, cfg, num_procs),
+        ranks, procs_blk, s_blk)                          # (lp, E), (lp, P)
+    recv_counts = blocking.transpose_counts(counts, topo)
+    occ = jax.vmap(occurrence_rank)(a)
+    return a, occ, recv_counts
+
+
+def pba_stream_round_block(r, a, occ, recv_counts, pool, ranks,
+                           cfg: PBAConfig, num_procs: int, round_cap: int,
+                           urn_budget: int, block_cap: int, topo: Topology):
+    """Round ``r`` of the device-sharded streamed exchange 2.
+
+    The same round contract as :func:`_streamed_exchange2`, unrolled so a
+    host driver can interleave rounds with shard write-back: grant request
+    ranks [r*C_r, (r+1)*C_r) of every pair from the resident pool, route
+    the (lp, P, C_r) buffer through the topology's blocked transpose
+    (flat all_to_all or hierarchical two-hop — the round logic never looks
+    at the device axes), and scatter the received band into this round's
+    edges. The block is compacted on device: band edges move to the front
+    in edge order (request ranks are unique per pair, so the sort key
+    ``band ? j : E + j`` is collision-free), and only the leading
+    ``block_cap = min(E, P*C_r)`` columns — a static bound on any round's
+    band size — return to the host. Returns (u, v) of shape
+    (lp, block_cap); -1 marks padding (and, in ``v``, urn-exhausted
+    grants, which the host drops exactly like the host-path stream).
+    """
+    lp = a.shape[0]
+    e_local = cfg.edges_per_proc
+    out = jax.vmap(
+        lambda p, rc: _grant_round(p, rc, r, round_cap, e_local, urn_budget)
+    )(pool, recv_counts)                                  # (lp, P, C_r)
+    recv = blocking.transpose_payload(out, topo)
+    band = (occ >= r * round_cap) & (occ < (r + 1) * round_cap)
+    idx = a * round_cap + jnp.clip(occ - r * round_cap, 0, round_cap - 1)
+    vals = jnp.take_along_axis(
+        recv.reshape(lp, num_procs * round_cap), idx, axis=1)
+    v = jnp.where(band, vals, -1)
+    j = jnp.arange(e_local, dtype=jnp.int32)
+    u = (ranks[:, None] * jnp.int32(cfg.vertices_per_proc)
+         + (j // cfg.edges_per_vertex)[None, :])
+    u = jnp.where(band, u, -1)
+    key = jnp.where(band, j, e_local + j)
+    order = jnp.argsort(key, axis=1)
+    u = jnp.take_along_axis(u, order, axis=1)[:, :block_cap]
+    v = jnp.take_along_axis(v, order, axis=1)[:, :block_cap]
+    return u, v
+
+
+def stream_block_capacity(edges_per_proc: int, num_procs: int,
+                          round_cap: int) -> int:
+    """Static per-proc bound on a round's band size: every (requester,
+    provider) pair contributes at most C_r request ranks per round, and a
+    processor never has more than E edges in total."""
+    return min(edges_per_proc, num_procs * round_cap)
+
+
 def pba_shard_body(rank, faction_row, s, cfg: PBAConfig, num_procs: int,
                    pair_capacity: int, topo: Topology):
     """Per-device PBA program (one logical proc per device).

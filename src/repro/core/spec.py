@@ -112,6 +112,9 @@ class GraphSpec:
         ``out_dir``).
       num_shards: shard count when a non-streamed execution writes the
         shards sink (streamed executions shard per block).
+      overlap: device-sharded streamed execution only — double-buffer the
+        rounds (dispatch round r+1's device grant while round r's block is
+        written back). Pure scheduling; never changes the graph.
     """
 
     model: str
@@ -138,13 +141,14 @@ class GraphSpec:
     sink: str = "memory"
     out_dir: Optional[str] = None
     num_shards: int = 8
+    overlap: bool = True
 
     # Execution details, not graph identity: host/sharded/auto runs of the
     # same spec are bit-identical (the parity suite pins this), and the
     # sink/shard layout only says where edges land — so a resume of the
     # same graph from a different execution mode must not be rejected.
     _NON_IDENTITY_FIELDS = ("out_dir", "execution", "sink", "num_shards",
-                            "topology")
+                            "topology", "overlap")
 
     def digest(self) -> str:
         """Fingerprint of every generation-relevant field (execution mode,

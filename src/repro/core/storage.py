@@ -151,25 +151,32 @@ class ShardWriter:
             _check_resume(man, num_vertices, num_shards, meta)
             man.setdefault("counts", {})
         self.manifest = man
+        # O(1) membership for the hot is_complete check; the manifest list
+        # stays the on-disk source of truth.
+        self._done = set(man["complete"])
 
     def is_complete(self, i: int) -> bool:
-        return i in self.manifest["complete"]
+        return i in self._done
 
     def missing(self) -> list:
-        done = set(self.manifest["complete"])
         return [i for i in range(self.manifest["num_shards"])
-                if i not in done]
+                if i not in self._done]
 
     def write_block(self, i: int, src: np.ndarray, dst: np.ndarray) -> None:
         if not 0 <= i < self.manifest["num_shards"]:
             raise ValueError(
                 f"block {i} out of range for {self.manifest['num_shards']} "
                 "shards")
+        src, dst = np.asarray(src), np.asarray(dst)
+        if src.shape != dst.shape:
+            raise ValueError(
+                f"block {i}: src/dst length mismatch "
+                f"({src.shape} vs {dst.shape})")
         if self.is_complete(i):
             return
-        n = _write_shard_file(self.out_dir, i, np.asarray(src),
-                              np.asarray(dst))
+        n = _write_shard_file(self.out_dir, i, src, dst)
         self.manifest["complete"].append(i)
+        self._done.add(i)
         self.manifest["counts"][str(i)] = n
         _dump_manifest(self.out_dir, self.manifest)
 

@@ -1,10 +1,13 @@
-"""Compile-only harness for the sharded PBA exchange program.
+"""Compile-only harness for the sharded PBA exchange programs.
 
 Shared by the collective-bytes CI gate (scripts/collective_gate.py) and
 the lp x topology sweep (benchmarks/hierarchical_exchange.py): both need
 the *compiled* exchange for a resolved :class:`repro.api.GenPlan` — to
 read cost analysis and HLO collective stats — without running it. One
 definition keeps the gate and the benchmark measuring the same program.
+:func:`compile_sharded_stream_round` does the same for one round of the
+device-sharded stream (the out-of-core exchange-2 program), so the gate
+can pin the streamed path's collective volume too.
 """
 from __future__ import annotations
 
@@ -43,3 +46,26 @@ def compile_sharded_pba(pl):
     procs = jnp.asarray(table.procs).reshape(d, lp, table.max_s)
     s = jnp.asarray(table.s).reshape(d, lp)
     return fn, (procs, s)
+
+
+def compile_sharded_stream_round(pl):
+    """(jitted_fn, example_args) for one round of a streamed-execution
+    plan's device-sharded exchange-2 program (grant + blocked transpose +
+    band compaction) — the program ``PBAShardedStream`` dispatches per
+    block. The example state is zero-filled at the plan's static shapes;
+    collective volume depends only on the shapes, not the values.
+    """
+    from repro.core.pba import stream_block_capacity
+    from repro.core.stream import _sharded_grant_fns
+
+    cfg, topo = pl.config, pl.topology
+    p, lp, d = pl.num_procs, pl.lp, topo.num_devices
+    e = cfg.edges_per_proc
+    block_cap = stream_block_capacity(e, p, pl.round_capacity)
+    _, round_fn = _sharded_grant_fns(cfg, p, topo, pl.urn_budget,
+                                     pl.round_capacity, block_cap)
+    z = jnp.zeros
+    args = (jnp.int32(0), z((d, lp, e), jnp.int32),
+            z((d, lp, e), jnp.int32), z((d, lp, p), jnp.int32),
+            z((d, lp, e + pl.urn_budget), jnp.int32))
+    return round_fn, args

@@ -37,7 +37,7 @@ topology through.
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Iterable
 
 import jax
 import jax.numpy as jnp
@@ -82,6 +82,46 @@ def round_window(counts: jax.Array, r, round_cap: int) -> jax.Array:
 def residual_counts(counts: jax.Array, r, round_cap: int) -> jax.Array:
     """s_r: how many items each pair still owes *after* round ``r``."""
     return jnp.maximum(counts - (r + 1) * round_cap, 0)
+
+
+def drive_rounds(indices: Iterable[int],
+                 dispatch: Callable[[int], object],
+                 writeback: Callable[[int, object], None],
+                 overlap: bool = True) -> int:
+    """Host-side round driver with double-buffered compute/write overlap.
+
+    The out-of-core seam of the sharded stream: ``dispatch(r)`` enqueues
+    round ``r``'s device program and returns immediately with the
+    not-yet-materialized output (JAX dispatch is asynchronous);
+    ``writeback(r, handle)`` materializes the handle (blocking on that
+    round's completion) and lands it in the sink.
+
+    With ``overlap=True`` round ``r+1`` is dispatched *before* round ``r``
+    is written back, so the device computes the next grant while the host
+    gathers, compacts and writes the previous block — the
+    ``block_until_ready`` on round ``r`` is deferred until its successor
+    is already in flight. ``overlap=False`` serializes the two for
+    baseline comparison (benchmarks/streamed_sharded.py sweeps both).
+    Returns the number of rounds driven. ``indices`` may be any subset in
+    any order — a resume drives exactly the manifest's missing blocks.
+    """
+    if not overlap:
+        n = 0
+        for i in indices:
+            writeback(i, dispatch(i))
+            n += 1
+        return n
+    pending: tuple | None = None
+    n = 0
+    for i in indices:
+        handle = dispatch(i)          # async: device starts round i now
+        if pending is not None:
+            writeback(*pending)       # blocks on i-1 while i computes
+        pending = (i, handle)
+        n += 1
+    if pending is not None:
+        writeback(*pending)
+    return n
 
 
 def run_exchange(counts: jax.Array, round_cap: int, max_rounds: int,

@@ -215,7 +215,8 @@ def test_sharded_parity_matrix_8dev():
 
 
 def test_auto_resolution_8dev():
-    """auto picks sharded when P divides the devices, host otherwise."""
+    """auto picks sharded when P divides the devices, host otherwise; a
+    shards sink on D > 1 devices resolves to sharded-streamed execution."""
     run_with_devices("""
         from repro import api
         from repro.api import GraphSpec
@@ -223,8 +224,110 @@ def test_auto_resolution_8dev():
                          edges_per_vertex=3, seed=5)
         assert api.plan(base).execution == "sharded"
         assert api.plan(base.replace(procs=6)).execution == "host"
-        assert api.plan(base.replace(sink="shards", out_dir="/tmp/x")
-                        ).execution == "streamed"
+        pl = api.plan(base.replace(sink="shards", out_dir="/tmp/x"))
+        assert pl.execution == "streamed"
+        assert pl.executor == "pba_stream_sharded"
+        assert pl.topology.label == "flat_1x8" and pl.lp == 1
+        # P that does not divide the devices falls back to the host driver
+        pl6 = api.plan(base.replace(procs=6, sink="shards", out_dir="/tmp/x"))
+        assert pl6.executor == "pba_stream"
+        print("OK")
+    """, 8)
+
+
+def test_sharded_streamed_parity_matrix_8dev():
+    """Sharded-streamed output is bit-identical to host-streamed and (as a
+    multiset) to single-shot across host / flat(8) / pods(2,4) / pods(4,2)
+    x memory / shards sinks, and a partial manifest written by one driver
+    resumes mid-round under another topology's driver."""
+    run_with_devices("""
+        import json
+        import os
+        import tempfile
+        import numpy as np
+        from repro import api
+        from repro.api import GraphSpec
+        from repro.core.storage import read_shards
+        from repro.runtime import Topology
+
+        base = GraphSpec(model="pba", procs=8, vertices_per_proc=100,
+                         edges_per_vertex=3, seed=5, factions="hub",
+                         pair_capacity=16, exchange_rounds=4,
+                         total_capacity_factor=8)
+        topos = (Topology.host(), Topology.flat(8), Topology.pods(2, 4),
+                 Topology.pods(4, 2))
+        with tempfile.TemporaryDirectory() as d:
+            ref_dir = os.path.join(d, "ref")
+            ref = api.generate(base.replace(execution="streamed",
+                                            topology=Topology.host(),
+                                            sink="shards", out_dir=ref_dir))
+            assert ref.plan.executor == "pba_stream"
+            assert ref.stats.dropped_edges == 0, ref.stats
+            s_ref, d_ref, man_ref = read_shards(ref_dir)
+
+            for topo in topos:
+                for sink in ("memory", "shards"):
+                    out = os.path.join(d, f"{topo.label}_{sink}")
+                    res = api.generate(base.replace(
+                        execution="streamed", topology=topo, sink=sink,
+                        out_dir=out if sink == "shards" else None))
+                    want = ("pba_stream" if topo.is_host
+                            else "pba_stream_sharded")
+                    assert res.plan.executor == want, (topo.label, sink)
+                    assert res.stats.dropped_edges == 0, (topo.label, sink)
+                    if sink == "memory":
+                        s, dd = (np.asarray(res.edges.src),
+                                 np.asarray(res.edges.dst))
+                        man = None
+                    else:
+                        s, dd, man = read_shards(out)
+                    np.testing.assert_array_equal(
+                        s, s_ref, err_msg=f"{topo.label}/{sink}")
+                    np.testing.assert_array_equal(
+                        dd, d_ref, err_msg=f"{topo.label}/{sink}")
+                    if man is not None:
+                        assert man["counts"] == man_ref["counts"], topo.label
+
+            # vs single-shot: parity-mode stream (pools at the static
+            # device budget) over an overflow-free capacity must emit the
+            # single-shot edge multiset exactly, on every topology
+            shot_spec = base.replace(pair_capacity=512, exchange_rounds=None,
+                                     execution="sharded")
+            shot = api.generate(shot_spec)
+            assert shot.stats.dropped_edges == 0, shot.stats
+            n = shot.stats.num_vertices
+            def key(a, b):
+                a = np.asarray(a).reshape(-1).astype(np.int64)
+                return np.sort(a * n + np.asarray(b).reshape(-1))
+            k_shot = key(shot.edges.src, shot.edges.dst)
+            for topo in topos:
+                res = api.generate(shot_spec.replace(
+                    execution="streamed", exchange_rounds=8,
+                    auto_capacity=False, topology=topo))
+                assert res.stats.exchange_rounds > 1  # actually multi-round
+                assert res.stats.dropped_edges == 0, (topo.label, res.stats)
+                np.testing.assert_array_equal(
+                    key(res.edges.src, res.edges.dst), k_shot,
+                    err_msg=topo.label)
+
+            # resume from a partial manifest mid-round: drop a middle
+            # shard from the host-streamed run, finish it with the
+            # pods-sharded driver — same shards, bit for bit
+            man = json.load(open(os.path.join(ref_dir, "manifest.json")))
+            drop = sorted(man["complete"])[len(man["complete"]) // 2]
+            man["complete"] = [i for i in man["complete"] if i != drop]
+            del man["counts"][str(drop)]
+            json.dump(man, open(os.path.join(ref_dir, "manifest.json"), "w"))
+            os.remove(os.path.join(ref_dir, f"shard_{drop:05d}.npz"))
+            res = api.generate(base.replace(execution="streamed",
+                                            topology=Topology.pods(2, 4),
+                                            sink="shards", out_dir=ref_dir))
+            assert res.plan.executor == "pba_stream_sharded"
+            assert sorted(res.manifest["complete"]) == \
+                list(range(res.manifest["num_shards"]))
+            s2, d2, _ = read_shards(ref_dir)
+            np.testing.assert_array_equal(s2, s_ref)
+            np.testing.assert_array_equal(d2, d_ref)
         print("OK")
     """, 8)
 
@@ -267,18 +370,43 @@ def test_plan_rejects_missing_devices():
 def test_plan_rejects_sink_and_topology_conflicts():
     with pytest.raises(ValueError, match="out_dir"):
         api.plan(PBA_SPEC.replace(sink="shards"))
-    with pytest.raises(ValueError, match="streamed"):
-        api.plan(PBA_SPEC.replace(execution="streamed",
-                                  topology=Topology.flat(1)))
-    with pytest.raises(ValueError, match="streamed"):  # auto + shards
-        api.plan(PBA_SPEC.replace(sink="shards", out_dir="/d",
-                                  topology=Topology.flat(1)))
     with pytest.raises(ValueError, match="host execution"):
         api.plan(PBA_SPEC.replace(execution="host",
                                   topology=Topology.flat(1)))
     with pytest.raises(ValueError, match="device topology"):
         api.plan(PBA_SPEC.replace(execution="sharded",
                                   topology=Topology.host()))
+    # pk streaming stays host-driven: a device topology is a config error
+    with pytest.raises(ValueError, match="host-driven"):
+        api.plan(PK_SPEC.replace(execution="streamed",
+                                 topology=Topology.flat(1)))
+
+
+def test_plan_streamed_resolves_sharded_stream():
+    """Streamed execution over a device topology resolves to the
+    device-sharded stream driver — the out-of-core path uses the devices
+    (the pre-PR planner rejected exactly this combination)."""
+    pl = api.plan(PBA_SPEC.replace(execution="streamed",
+                                   topology=Topology.flat(1)))
+    assert pl.execution == "streamed"
+    assert pl.executor == "pba_stream_sharded" and pl.lp == 8
+    # auto + shards sink routes through the same resolution
+    pl = api.plan(PBA_SPEC.replace(sink="shards", out_dir="/d",
+                                   topology=Topology.flat(1)))
+    assert pl.execution == "streamed"
+    assert pl.executor == "pba_stream_sharded"
+    # Topology.host() (or a single device with no topology request) still
+    # selects the host-driven stream
+    assert api.plan(PBA_SPEC.replace(execution="streamed",
+                                     topology=Topology.host())
+                    ).executor == "pba_stream"
+    assert api.plan(PBA_SPEC.replace(execution="streamed")
+                    ).executor == "pba_stream"
+    # P must still factor over the requested topology, pre-compilation
+    with pytest.raises(ValueError, match="divide"):
+        api.plan(PBA_SPEC.replace(procs=10, execution="streamed",
+                                  topology=Topology.flat(8),
+                                  factions=FactionSpec(5, 2, 5, seed=2)))
 
 
 def test_plan_rejects_bad_factions():
@@ -305,6 +433,39 @@ def test_plan_describe_contents():
     assert "bytes:" in text
     assert pl.requested_edges == 8 * 100 * 3
     assert pl.num_vertices == 800
+
+
+def test_plan_describe_streamed_bytes():
+    """Streamed plans report the streaming working set — per-round block
+    bytes and the overlap double-buffer — not the host-path numbers (the
+    describe() fix: a sharded-streamed plan used to print the host
+    stream's byte estimates)."""
+    spec = PBA_SPEC.replace(execution="streamed", pair_capacity=16,
+                            exchange_rounds=4, topology=Topology.flat(1))
+    pl = api.plan(spec)
+    assert pl.executor == "pba_stream_sharded"
+    block_cap = min(300, 8 * pl.round_capacity)  # min(E, P * C_r)
+    assert pl.block_bytes == 8 * 8 * block_cap
+    assert pl.overlap_bytes == 2 * pl.block_bytes
+    assert pl.host_bytes == 2 * pl.block_bytes  # gather + write-back copy
+    # per-device resident set scales with lp, not with the host edge list
+    assert pl.device_bytes == 4 * 8 * (3 * 300 + 2 * 300 + 8
+                                       + 2 * 8 * pl.round_capacity
+                                       + 2 * block_cap)
+    text = pl.describe()
+    assert "block ~" in text and "overlap buffer ~" in text
+    off = api.plan(spec.replace(overlap=False))
+    assert off.overlap_bytes == 0
+    assert off.host_bytes == off.block_bytes
+    assert "overlap off" in off.describe()
+    # host-driven streamed plans still report their block size, no overlap
+    host_pl = api.plan(spec.replace(topology=Topology.host()))
+    assert host_pl.executor == "pba_stream"
+    assert host_pl.block_bytes > 0 and host_pl.overlap_bytes == 0
+    # non-streamed plans carry no streaming estimates
+    shot = api.plan(PBA_SPEC.replace(execution="host"))
+    assert shot.block_bytes == 0 and shot.overlap_bytes == 0
+    assert "block ~" not in shot.describe()
 
 
 def test_plan_is_pure_resolution():
@@ -348,6 +509,8 @@ def test_spec_digest_sensitivity():
     assert base.digest() == base.replace(execution="host").digest()
     assert base.digest() == base.replace(sink="shards", out_dir="/d",
                                          num_shards=4).digest()
+    # overlap is pure scheduling — never part of the graph's identity
+    assert base.digest() == base.replace(overlap=False).digest()
 
 
 def test_spec_digest_hashes_large_jax_arrays_by_content():

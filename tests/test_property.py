@@ -9,9 +9,12 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (FactionSpec, PBAConfig, PKConfig, degree_counts,
                         generate_pba_host, generate_pk_host, make_factions,
                         star_clique_seed, dense_power_seed, pk_sizes)
+from repro.core import storage
 from repro.core.pba import occurrence_rank
 from repro.core.pk import decompose_base
+from repro.core.stream import PBAStream
 from repro.kernels import ref
+from repro.runtime import streaming
 
 SETTINGS = settings(max_examples=25, deadline=None)
 
@@ -49,6 +52,78 @@ def test_pba_degree_sum_invariant(num_procs, k, seed):
     # sum of degrees == 2 * emitted edges (undirected view)
     assert deg.sum() == 2 * stats.emitted_edges
     assert stats.emitted_edges + stats.dropped_edges == stats.requested_edges
+
+
+# --- streaming round/residual contract (runtime/streaming.py) ---------------
+
+@given(st.lists(st.integers(0, 500), min_size=1, max_size=64),
+       st.integers(1, 64))
+@SETTINGS
+def test_round_windows_partition_any_counts(counts, cap):
+    """For any pair-counts vector: the round windows partition every
+    pair's count exactly, the residual is monotone non-increasing, and it
+    hits zero within the static ``rounds_needed`` bound."""
+    c = jnp.asarray(counts, jnp.int32)
+    bound = streaming.rounds_needed(max(max(counts), 1), cap)
+    windows = np.stack([np.asarray(streaming.round_window(c, r, cap))
+                        for r in range(bound)])
+    residuals = np.stack([np.asarray(streaming.residual_counts(c, r, cap))
+                          for r in range(bound)])
+    np.testing.assert_array_equal(windows.sum(axis=0), np.asarray(counts))
+    assert windows.min() >= 0 and windows.max() <= cap
+    assert (np.diff(residuals, axis=0) <= 0).all()
+    assert (residuals >= 0).all()
+    np.testing.assert_array_equal(residuals[-1], 0)
+    # conservation per round: what a pair ships is exactly what its
+    # residual drops by
+    prev = np.asarray(counts)
+    for r in range(bound):
+        np.testing.assert_array_equal(windows[r], prev - residuals[r])
+        prev = residuals[r]
+
+
+@given(st.integers(0, 10_000), st.integers(1, 3), st.integers(1, 6))
+@SETTINGS
+def test_stream_blocks_partition_edges_any_layout(seed, num_factions,
+                                                  rounds):
+    """Arbitrary faction layouts: the stream's per-round blocks partition
+    the full edge set (windows partition every pair's count), and auto
+    capacity means zero drops — emitted totals equal requested exactly."""
+    table = make_factions(4, FactionSpec(num_factions, 1, 4, seed=seed))
+    cfg = PBAConfig(vertices_per_proc=32, edges_per_vertex=2, seed=seed,
+                    pair_capacity=8, exchange_rounds=rounds)
+    stream = PBAStream(cfg, table)
+    blocks = [stream.block(i) for i in range(stream.num_blocks)]
+    assert sum(len(s) for s, _ in blocks) == stream.requested_edges
+    # every source vertex appears exactly edges_per_vertex times overall
+    src = np.concatenate([s for s, _ in blocks])
+    np.testing.assert_array_equal(
+        np.bincount(src, minlength=stream.num_vertices),
+        np.full(stream.num_vertices, cfg.edges_per_vertex))
+
+
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=8),
+       st.integers(0, 10_000))
+@SETTINGS
+def test_shard_writer_manifest_totals(block_sizes, seed):
+    """ShardWriter manifest totals equal emitted edges exactly — invalid
+    (-1) slots are dropped from both the shard files and the counts."""
+    import tempfile
+    rng = np.random.default_rng(seed)
+    with tempfile.TemporaryDirectory() as d:
+        writer = storage.ShardWriter(d, 100, len(block_sizes))
+        total = 0
+        for i, m in enumerate(block_sizes):
+            src = rng.integers(-1, 100, m)
+            dst = rng.integers(-1, 100, m)
+            writer.write_block(i, src, dst)
+            total += int(((src >= 0) & (dst >= 0)).sum())
+        assert writer.edges_written == total
+        assert sorted(writer.manifest["complete"]) == \
+            list(range(len(block_sizes)))
+        src_all, dst_all, man = storage.read_shards(d)
+        assert len(src_all) == len(dst_all) == total
+        assert sum(man["counts"].values()) == total
 
 
 @given(st.lists(st.integers(0, 9), min_size=1, max_size=200))

@@ -98,6 +98,56 @@ def test_streaming_rounds1_bit_matches_legacy_when_no_overflow():
     np.testing.assert_array_equal(np.asarray(e_l.dst), np.asarray(e_s.dst))
 
 
+def test_drive_rounds_overlap_dispatch_before_writeback():
+    """The double-buffered driver dispatches round i+1 before writing back
+    round i, writes back in order, and drives arbitrary resume subsets."""
+    events = []
+
+    def dispatch(i):
+        events.append(("dispatch", i))
+        return i * 10
+
+    def writeback(i, handle):
+        assert handle == i * 10
+        events.append(("write", i))
+
+    n = streaming.drive_rounds([0, 1, 2], dispatch, writeback, overlap=True)
+    assert n == 3
+    assert events == [("dispatch", 0), ("dispatch", 1), ("write", 0),
+                      ("dispatch", 2), ("write", 1), ("write", 2)]
+    events.clear()
+    streaming.drive_rounds([4, 2], dispatch, writeback, overlap=False)
+    assert events == [("dispatch", 4), ("write", 4),
+                      ("dispatch", 2), ("write", 2)]
+    assert streaming.drive_rounds([], dispatch, writeback) == 0
+
+
+def test_pba_sharded_stream_single_device_matches_host_stream():
+    """flat(1) runs the full sharded-stream machinery in-process (lp = P):
+    blocks and meta must match the host stream exactly, and the two
+    drivers must be resume-compatible."""
+    from repro.core.stream import PBAShardedStream
+    from repro.runtime import Topology
+
+    cfg = dataclasses.replace(HUB_CFG, exchange_rounds=4)
+    table = hub_factions(8)
+    host = PBAStream(cfg, table)
+    sh = PBAShardedStream(cfg, table, topology=Topology.flat(1))
+    assert sh.num_blocks == host.num_blocks
+    assert sh.meta() == host.meta()  # interchangeable mid-manifest
+    for i in (0, 1, host.num_blocks - 1):
+        hu, hv = host.block(i)
+        su, sv = sh.block(i)
+        np.testing.assert_array_equal(su, hu)
+        np.testing.assert_array_equal(sv, hv)
+    with pytest.raises(ValueError, match="out of range"):
+        sh.block(sh.num_blocks)
+    # the sharded stream needs devices; the host topology is the host
+    # stream's job
+    with pytest.raises(ValueError, match="host topology"):
+        PBAShardedStream(cfg, table, topology=Topology.host())
+
+
 # --- host == sharded bit-parity under streaming -----------------------------
 
 @pytest.mark.parametrize("num_devices", [1, 2, 8])

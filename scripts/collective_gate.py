@@ -27,6 +27,14 @@ mechanical checks:
      baselines are (re)written and reported, so the gate bootstraps itself;
      delete the file to re-baseline after an intentional exchange change.
 
+  4. Compiled-collective audit + drift (repro.analysis.audit): the exchange
+     programs must pass the SPMD-uniformity audit (all-reduced while
+     predicates, topology-matching all_to_all counts), and their per-kind
+     HLO collective *instruction* counts must not grow over the committed
+     results/collective_audit_baseline.json — a new collective in a
+     compiled program is a reviewed, intentional diff (delete the baseline
+     to re-baseline after one).
+
 Exits 0 with a notice when the backend offers no cost analysis.
 
 Usage (see scripts/verify.sh):
@@ -51,6 +59,9 @@ from repro.runtime import Topology, spmd
 
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "collective_bytes_baseline.json")
+AUDIT_BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "collective_audit_baseline.json")
 TOLERANCE = 0.25  # fractional drift allowed before the gate trips
 
 # Pod-scale reference: the paper's 1000 MPI ranks as logical processors
@@ -213,6 +224,84 @@ def main() -> int:
         base["topologies"] = {**record["topologies"], **base_topos}
         with open(BASELINE, "w") as f:
             json.dump(base, f, indent=2)
+
+    # --- 4: compiled-collective audit + instruction-count drift -------------
+    return audit_gate(n_dev, topos)
+
+
+def audit_gate(n_dev: int, topos: list) -> int:
+    """SPMD-uniformity audit of every gate program, then per-kind HLO
+    collective instruction counts diffed against the committed baseline.
+    Counts are static (no trip multiplication), so they only move when a
+    collective is added to or removed from a compiled program — exactly
+    the diff that should be a reviewed change."""
+    from repro.analysis import audit as audit_lib
+
+    flat = topos[0]
+    audits = []
+    for topo in topos:
+        pl = api.plan(_spec(n_dev, 200, 3, 256, topo).replace(
+            exchange_rounds=4))
+        audits.append(audit_lib.audit_exchange(
+            pl, label=f"{topo.label}/exchange_r4"))
+    stream_pl = api.plan(_spec(n_dev, 200, 3, 256, flat).replace(
+        execution="streamed", exchange_rounds=4))
+    audits.append(audit_lib.audit_stream_round(stream_pl))
+
+    failed = False
+    for a in audits:
+        a2a = (f"all_to_alls {a.hlo_all_to_alls} "
+               f"(expect {a.expected_all_to_alls})")
+        print(f"collective gate: audit {a.label}: {a.hlo_collectives} {a2a}")
+        for p in a.problems:
+            print(f"collective gate FAILED: audit {a.label}: {p}",
+                  file=sys.stderr)
+            failed = True
+    if failed:
+        return 1
+
+    inv = audit_lib.inventory(audits, extra={"devices": n_dev})
+    if not os.path.exists(AUDIT_BASELINE):
+        os.makedirs(os.path.dirname(AUDIT_BASELINE), exist_ok=True)
+        with open(AUDIT_BASELINE, "w") as f:
+            json.dump(inv, f, indent=2)
+        print(f"collective gate: wrote new audit baseline {AUDIT_BASELINE} "
+              f"({sorted(inv['programs'])})")
+        return 0
+
+    with open(AUDIT_BASELINE) as f:
+        base = json.load(f)
+    base_programs = base.get("programs", {})
+    stale = False
+    for label, prog in inv["programs"].items():
+        counts = prog.get("hlo_collectives") or {}
+        if label not in base_programs:
+            base_programs[label] = prog
+            stale = True
+            print(f"collective gate: baselined new audit program {label} "
+                  f"({counts})")
+            continue
+        base_counts = base_programs[label].get("hlo_collectives") or {}
+        for kind, n in counts.items():
+            if n > base_counts.get(kind, 0):
+                print(f"collective gate FAILED: {label} compiles to {n} "
+                      f"{kind} instruction(s), baseline has "
+                      f"{base_counts.get(kind, 0)} — a new collective in a "
+                      f"compiled program must be a reviewed diff (delete "
+                      f"{AUDIT_BASELINE} to re-baseline)", file=sys.stderr)
+                failed = True
+        for kind, n in base_counts.items():
+            if counts.get(kind, 0) < n:
+                print(f"collective gate: note — {label} dropped to "
+                      f"{counts.get(kind, 0)} {kind} (baseline {n}); "
+                      f"re-baseline to lock in the improvement")
+    if failed:
+        return 1
+    if stale:
+        base["programs"] = base_programs
+        with open(AUDIT_BASELINE, "w") as f:
+            json.dump(base, f, indent=2)
+    print(f"collective gate OK: audit counts match {AUDIT_BASELINE}")
     return 0
 
 

@@ -1,0 +1,18 @@
+#!/usr/bin/env python
+"""Thin wrapper over ``python -m repro.analysis`` that works without
+PYTHONPATH=src — handy for editors and pre-commit hooks.
+
+  python scripts/lint.py                 # lint the configured paths
+  python scripts/lint.py --format=github # CI annotations
+  python scripts/lint.py audit           # compiled-collective audit
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

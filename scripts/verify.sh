@@ -1,12 +1,15 @@
 #!/usr/bin/env bash
-# Tier-1 verify + 8-host-device smoke + collective-bytes gate.
+# Tier-1 verify + 8-host-device smoke + static analysis + collective gates.
 #
 # Catches environment drift mechanically: the probe prints which shard_map
-# API the runtime layer resolved, the test run covers the single-device
-# suite, the smoke pass exercises the real distributed paths (shard_map
-# collectives, blocked/streamed transposes, tail masking) on 8 forced host
-# devices, and the collective gate fails on exchange-volume regressions
-# (scripts/collective_gate.py, via runtime.spmd.cost_analysis).
+# API the runtime layer resolved, spmdlint enforces the SPMD invariants
+# statically (python -m repro.analysis), the test run covers the
+# single-device suite, the smoke pass exercises the real distributed paths
+# (shard_map collectives, blocked/streamed transposes, tail masking) on 8
+# forced host devices, the compiled-collective audit re-derives the
+# all_to_all structure of every front-door program from its jaxpr/HLO, and
+# the collective gate fails on exchange-volume regressions and audit-count
+# drift against results/collective_audit_baseline.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -26,6 +29,9 @@ try:
 except ImportError:
     print("hypothesis missing: property tests will be skipped")
 PY
+
+echo "== spmdlint =="
+python -m repro.analysis
 
 echo "== tier-1 tests =="
 python -m pytest -x -q
@@ -146,6 +152,10 @@ with tempfile.TemporaryDirectory() as d:
     assert "spec_digest" in man["meta"]
 print("front door OK")
 PY
+
+echo "== compiled-collective audit =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.analysis audit --out /tmp/collective_audit.json
 
 echo "== collective-bytes gate =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \

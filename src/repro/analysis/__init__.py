@@ -1,0 +1,30 @@
+"""Static analysis for the repo's SPMD invariants.
+
+Two layers (see ISSUE 6 / README "Invariants & static analysis"):
+
+  spmdlint (:mod:`repro.analysis.linter` + :mod:`repro.analysis.rules`) —
+  an AST lint pass over the source invariants: raw shard_map/mesh APIs and
+  raw collectives stay inside repro.runtime, out-of-src code enters through
+  the repro.api front door, generator paths stay deterministic, int32
+  edge-count seams stay guarded, kernel call sites never pin interpret=.
+  Pure stdlib — importing this package does not import JAX.
+
+  audit (:mod:`repro.analysis.audit`) — a compiled-collective auditor
+  tracing a GenPlan's SPMD programs (jaxpr + optimized HLO, never
+  executing) and verifying SPMD-uniformity: identical collectives on all
+  cond branches, all-reduced while_loop predicates, and all_to_all counts
+  matching the declared Topology. Imports JAX lazily, on first use.
+
+CLI: ``python -m repro.analysis`` (lint) / ``python -m repro.analysis
+audit``; thin wrapper at scripts/lint.py.
+"""
+from repro.analysis.linter import (DEFAULT_PATHS, ImportTable, LintConfig,
+                                   Violation, find_repo_root, lint_paths,
+                                   lint_repo, lint_source, load_config)
+from repro.analysis.rules import all_rules, rules_by_id
+
+__all__ = [
+    "DEFAULT_PATHS", "ImportTable", "LintConfig", "Violation",
+    "find_repo_root", "lint_paths", "lint_repo", "lint_source",
+    "load_config", "all_rules", "rules_by_id",
+]

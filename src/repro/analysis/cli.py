@@ -1,0 +1,138 @@
+"""Command line for the static-analysis subsystem.
+
+  python -m repro.analysis [paths...] [--format text|github|json]
+      lint the repo's configured paths (exit 1 on any violation)
+
+  python -m repro.analysis audit [--out FILE] [--no-hlo]
+      trace + compile the gate topologies' exchange programs on the
+      current device set and run the SPMD-uniformity audit (exit 1 on
+      any structural problem). Run under forced host devices to audit
+      multi-device structure, e.g.
+      XLA_FLAGS=--xla_force_host_platform_device_count=8.
+
+The lint path imports no JAX — it stays fast enough for a pre-commit hook.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional, Sequence
+
+from repro.analysis.linter import (Violation, find_repo_root, lint_paths,
+                                   load_config)
+
+
+def format_violations(violations: Sequence[Violation], fmt: str) -> str:
+    if fmt == "github":
+        return "\n".join(
+            f"::error file={v.path},line={v.line},col={v.col},"
+            f"title={v.rule}::{v.message}" for v in violations)
+    if fmt == "json":
+        return json.dumps([vars(v) for v in violations], indent=2)
+    return "\n".join(v.format() for v in violations)
+
+
+def lint_main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="spmdlint: SPMD invariant linter (rules RPR001..)")
+    ap.add_argument("paths", nargs="*",
+                    help="repo-relative paths (default: pyproject config)")
+    ap.add_argument("--format", choices=("text", "github", "json"),
+                    default="text")
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: nearest pyproject.toml)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule IDs to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true")
+    ns = ap.parse_args(argv)
+
+    from repro.analysis.rules import all_rules, rules_by_id
+    if ns.list_rules:
+        for rule in all_rules():
+            print(f"{rule.id}  {rule.title}")
+        return 0
+    root = ns.root or find_repo_root()
+    rules = (rules_by_id(ns.select.split(",")) if ns.select else None)
+    violations = lint_paths(root, paths=ns.paths or None, rules=rules,
+                            config=load_config(root))
+    if violations:
+        print(format_violations(violations, ns.format))
+        if ns.format != "json":
+            print(f"spmdlint: {len(violations)} violation(s)",
+                  file=sys.stderr)
+        return 1
+    if ns.format == "json":
+        print("[]")
+    else:
+        print("spmdlint: clean")
+    return 0
+
+
+def audit_main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis audit",
+        description="compiled-collective SPMD-uniformity audit")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON inventory here")
+    ap.add_argument("--no-hlo", action="store_true",
+                    help="jaxpr-level checks only (no compile)")
+    ns = ap.parse_args(argv)
+
+    import jax
+
+    from repro import api
+    from repro.analysis import audit as audit_lib
+    from repro.core import FactionSpec
+
+    n_dev = len(jax.devices())
+    from repro.runtime import Topology
+    topos = [Topology.flat(n_dev)]
+    if n_dev >= 4 and n_dev % 2 == 0:
+        topos.append(Topology.pods(2, n_dev // 2))
+
+    audits = []
+    for topo in topos:
+        spec = api.GraphSpec(
+            model="pba", procs=n_dev, vertices_per_proc=200,
+            edges_per_vertex=3, seed=7, pair_capacity=256,
+            factions=FactionSpec(max(n_dev // 2, 1), 2,
+                                 max(n_dev // 2, 2), seed=1),
+            topology=topo, execution="sharded")
+        audits.append(audit_lib.audit_exchange(
+            api.plan(spec), with_hlo=not ns.no_hlo))
+        # streamed config: the residual while_loop + per-round program
+        streamed = api.plan(spec.replace(execution="streamed",
+                                         exchange_rounds=4))
+        audits.append(audit_lib.audit_exchange(
+            api.plan(spec.replace(exchange_rounds=4)),
+            with_hlo=not ns.no_hlo,
+            label=f"{topo.label}/exchange_r4"))
+        if streamed.executor == "pba_stream_sharded":
+            audits.append(audit_lib.audit_stream_round(
+                streamed, with_hlo=not ns.no_hlo))
+
+    inv = audit_lib.inventory(audits, extra={"devices": n_dev})
+    if ns.out:
+        with open(ns.out, "w") as f:
+            json.dump(inv, f, indent=2)
+        print(f"audit: wrote {ns.out}")
+    rc = 0
+    for a in audits:
+        status = "OK " if a.ok else "FAIL"
+        hlo = ("" if a.hlo_all_to_alls is None else
+               f" all_to_alls={a.hlo_all_to_alls}"
+               f"(expect {a.expected_all_to_alls})")
+        print(f"audit {status} {a.label}: jaxpr={a.jaxpr_collectives}{hlo}")
+        for p in a.problems:
+            print(f"  problem: {p}", file=sys.stderr)
+            rc = 1
+    return rc
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "audit":
+        return audit_main(argv[1:])
+    return lint_main(argv)

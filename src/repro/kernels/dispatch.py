@@ -1,0 +1,35 @@
+"""Execution-mode probe shared by every Pallas kernel entry point.
+
+One place decides how a kernel runs (the ROADMAP "promote Pallas kernels"
+prep): the REPRO_PALLAS environment variable forces ``interpret`` (Pallas
+interpreter — correctness tests) or ``off`` (pure-jnp reference), otherwise
+the backend decides — compiled Mosaic on TPU, reference elsewhere.
+
+Kernel functions default ``interpret=None`` and resolve it through
+:func:`default_interpret`, so a *direct* kernel call (bypassing ops.py)
+still honors the probe instead of hardcoding interpret mode; spmdlint rule
+RPR006 flags call sites that pin a literal ``interpret=``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def mode() -> str:
+    """'interpret' | 'off' | 'tpu' — forced by REPRO_PALLAS, else probed."""
+    forced = os.environ.get("REPRO_PALLAS", "")
+    if forced in ("interpret", "off"):
+        return forced
+    return "tpu" if jax.default_backend() == "tpu" else "off"
+
+
+def default_interpret(interpret=None) -> bool:
+    """Resolve a kernel's ``interpret`` argument: an explicit bool wins;
+    None (the default) means compiled Mosaic on TPU and the Pallas
+    interpreter everywhere else — a direct kernel call can never pick a
+    mode the backend cannot execute."""
+    if interpret is None:
+        return mode() != "tpu"
+    return bool(interpret)

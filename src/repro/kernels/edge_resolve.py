@@ -12,6 +12,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import default_interpret
+
 BLOCK = 8 * 128
 MAX_VMEM_ENTRIES = 2 * 1024 * 1024  # 8 MiB of int32 for the resident source
 
@@ -22,8 +24,10 @@ def _resolve_kernel(src_ref, idx_ref, out_ref):
     out_ref[...] = jnp.take(src, idx, axis=0, mode="clip")
 
 
-def resolve_step_pallas(ptr: jax.Array, interpret: bool = True) -> jax.Array:
+def resolve_step_pallas(ptr: jax.Array,
+                        interpret: bool | None = None) -> jax.Array:
     """One ptr[ptr] pass. ptr: (m,) int32 with 0 <= ptr[j] < m."""
+    interpret = default_interpret(interpret)
     m = ptr.shape[0]
     if m > MAX_VMEM_ENTRIES:
         raise ValueError(f"resolve_step kernel supports m <= {MAX_VMEM_ENTRIES}")

@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import default_interpret
+
 VALUE_BLOCK = 2048
 BIN_BLOCK = 512
 
@@ -33,8 +35,9 @@ def _hist_kernel(v_ref, out_ref, *, num_bins: int):
 
 
 def histogram_pallas(values: jax.Array, num_bins: int,
-                     interpret: bool = True) -> jax.Array:
+                     interpret: bool | None = None) -> jax.Array:
     """Count int32 values into [0, num_bins); out-of-range values ignored."""
+    interpret = default_interpret(interpret)
     v = values.reshape(-1)
     m = v.shape[0]
     m_pad = -(-m // VALUE_BLOCK) * VALUE_BLOCK

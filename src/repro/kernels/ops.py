@@ -1,32 +1,29 @@
 """Jitted dispatch wrappers over the Pallas kernels.
 
-Dispatch policy (per-call overridable):
+Dispatch policy (kernels/dispatch.py, per-call overridable):
   * TPU backend        -> compiled Pallas kernels.
   * elsewhere          -> pure-jnp reference (XLA:CPU) — interpret-mode Pallas
                           is for *correctness tests*, not speed, so the
                           library only routes through it when forced via
                           REPRO_PALLAS=interpret (used by the test suite).
+
+The kernel functions themselves default ``interpret=None`` and resolve the
+mode through the same probe, so direct kernel calls and these wrappers can
+never disagree about execution mode.
 """
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import rng as rng_lib
 from repro.kernels import ref
+from repro.kernels.dispatch import mode as _mode
 from repro.kernels.pk_expand import pk_expand_pallas
 from repro.kernels.histogram import histogram_pallas
 from repro.kernels.edge_resolve import resolve_step_pallas, MAX_VMEM_ENTRIES
-
-
-def _mode() -> str:
-    forced = os.environ.get("REPRO_PALLAS", "")
-    if forced in ("interpret", "off"):
-        return forced
-    return "tpu" if jax.default_backend() == "tpu" else "off"
 
 
 def pk_expand(t_local, base_digits, seed_u, seed_v, n0: int, e0: int,
@@ -48,8 +45,7 @@ def pk_expand(t_local, base_digits, seed_u, seed_v, n0: int, e0: int,
                                  n0, e0, levels, flip, redraw)
     else:
         u, v = pk_expand_pallas(t_local, base_digits, seed_u, seed_v,
-                                n0, e0, levels, flip, redraw,
-                                interpret=(mode == "interpret"))
+                                n0, e0, levels, flip, redraw)
     if delete_prob > 0.0:
         delkey = rng_lib.device_key(seed, rng_lib.STREAM_PK_XOR, rank)
         keep = jax.random.uniform(delkey, (m,)) >= delete_prob
@@ -62,11 +58,11 @@ def histogram(values: jax.Array, num_bins: int) -> jax.Array:
     mode = _mode()
     if mode == "off":
         return ref.histogram_ref(values, num_bins)
-    return histogram_pallas(values, num_bins, interpret=(mode == "interpret"))
+    return histogram_pallas(values, num_bins)
 
 
 def resolve_step(ptr: jax.Array) -> jax.Array:
     mode = _mode()
     if mode == "off" or ptr.shape[0] > MAX_VMEM_ENTRIES:
         return ref.resolve_step_ref(ptr)
-    return resolve_step_pallas(ptr, interpret=(mode == "interpret"))
+    return resolve_step_pallas(ptr)

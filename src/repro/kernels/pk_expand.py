@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.dispatch import default_interpret
+
 BLOCK_ROWS = 8
 LANES = 128
 
@@ -72,8 +74,10 @@ def pk_expand_pallas(t_local: jax.Array, base_digits: jax.Array,
                      n0: int, e0: int, levels: int,
                      flip: jax.Array | None = None,
                      redraw: jax.Array | None = None,
-                     interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+                     interpret: bool | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
     """Expand (m,) local edge indices; m is padded to a (rows, 128) layout."""
+    interpret = default_interpret(interpret)
     m = t_local.shape[0]
     tile = BLOCK_ROWS * LANES
     m_pad = -(-m // tile) * tile

@@ -111,8 +111,11 @@ def _grouped_manual(cfg, p, x, gate_vals, ids_r, pos_r, keep, cap, mesh):
         # xb enters SEQ-SHARDED over 'model' (matches the sequence-parallel
         # residual): its backward is a reduce-scatter, not a psum — which
         # sidesteps XLA:CPU's bf16 AllReducePromotion crash for the big
-        # tensor. gates stay f32 (their boundary psum is tiny).
-        xb = jax.lax.all_gather(xb, "model", axis=1, tiled=True)
+        # tensor. gates stay f32 (their boundary psum is tiny). The raw
+        # jax.lax collectives here address the TP training-mesh axis
+        # directly by design — no exchange Topology to route through.
+        xb = jax.lax.all_gather(  # spmdlint: disable=RPR002
+            xb, "model", axis=1, tiled=True)
         xb = xb.astype(compute_dtype)
         g = g.astype(compute_dtype)
         shard = spmd.axis_index("model")
@@ -148,8 +151,9 @@ def _grouped_manual(cfg, p, x, gate_vals, ids_r, pos_r, keep, cap, mesh):
         # (act_btd shards seq on 'model'), moving 1/tp of the psum volume.
         # (f32 accumulation: XLA:CPU's AllReducePromotion crashes on bf16
         # collective reducers; TPU would keep bf16.)
-        y_shard = jax.lax.psum_scatter(y_part.astype(jnp.float32), "model",
-                                       scatter_dimension=1, tiled=True)
+        y_shard = jax.lax.psum_scatter(  # spmdlint: disable=RPR002
+            y_part.astype(jnp.float32), "model",
+            scatter_dimension=1, tiled=True)
         return y_shard.astype(xb.dtype)
 
     wg = p.get("wg")

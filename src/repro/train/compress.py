@@ -37,14 +37,18 @@ def compressed_psum(grads, error, axis_name: str):
     Returns (reduced grads, new error buffers). Scales are psum-maxed so all
     devices dequantize identically.
     """
+    # Raw jax.lax collectives are this seam's contract: the DP sync reduces
+    # over a caller-named training-mesh axis, not an exchange Topology —
+    # there is nothing for runtime.blocking to route.
     def one(g, e):
         x = g.astype(jnp.float32) + e
         scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
-        scale = jax.lax.pmax(scale, axis_name)
+        scale = jax.lax.pmax(scale, axis_name)  # spmdlint: disable=RPR002
         q = jnp.clip(jnp.round(x / scale), -127, 127)
         new_e = x - q * scale
-        total = jax.lax.psum(q, axis_name) * scale
-        n = jax.lax.psum(jnp.ones((), jnp.float32), axis_name)
+        total = jax.lax.psum(q, axis_name) * scale  # spmdlint: disable=RPR002
+        n = jax.lax.psum(  # spmdlint: disable=RPR002
+            jnp.ones((), jnp.float32), axis_name)
         return (total / n).astype(g.dtype), new_e
 
     flat_g, treedef = jax.tree_util.tree_flatten(grads)

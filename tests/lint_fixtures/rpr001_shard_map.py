@@ -1,0 +1,40 @@
+# lint-as: src/repro/core/fixture.py
+# RPR001: raw shard_map/mesh APIs outside repro.runtime, through every
+# aliasing the old regex missed. Lines tagged `# expect:` must be flagged.
+import jax  # noqa
+import jax.experimental.shard_map  # expect: RPR001
+from jax.experimental import shard_map as sm  # expect: RPR001
+from jax import make_mesh as mm  # expect: RPR001
+import jax.sharding as sh
+import jax.experimental as jex
+
+from repro.runtime import spmd
+
+
+def bad_direct(body, mesh, specs):
+    return jax.shard_map(body, mesh=mesh, in_specs=specs)  # expect: RPR001
+
+
+def bad_aliased(body, mesh, specs):
+    return sm.shard_map(body, mesh=mesh, in_specs=specs)  # expect: RPR001
+
+
+def bad_attr_chain(body, mesh, specs):
+    return jex.shard_map.shard_map(body, mesh=mesh)  # expect: RPR001
+
+
+def bad_mesh():
+    return mm((8,), ("proc",))  # expect: RPR001
+
+
+def bad_axis_type():
+    return sh.AxisType.Explicit  # expect: RPR001
+
+
+def suppressed(body, mesh, specs):
+    return jax.shard_map(body, mesh=mesh)  # spmdlint: disable=RPR001
+
+
+def good(body, mesh, specs):
+    # the sanctioned route: the runtime shim owns the raw API
+    return spmd.shard_map(body, mesh=mesh, in_specs=specs)

@@ -1,0 +1,38 @@
+# lint-as: src/repro/core/fixture.py
+# RPR002: raw jax.lax collective addressing outside repro.runtime.
+import jax
+import jax.lax as L
+from jax import lax
+from jax.lax import all_to_all as a2a  # expect: RPR002
+
+from repro.runtime import blocking, spmd
+
+
+def bad_canonical(x):
+    return jax.lax.all_to_all(x, "proc", 0, 0)  # expect: RPR002
+
+
+def bad_module_alias(x):
+    return L.psum(x, "proc")  # expect: RPR002
+
+
+def bad_from_import(x):
+    return lax.axis_index("proc")  # expect: RPR002
+
+
+def bad_aliased_name(x):
+    return a2a(x, "proc", 0, 0)  # expect: RPR002
+
+
+def bad_scatter(x):
+    return jax.lax.psum_scatter(x, "proc")  # expect: RPR002
+
+
+def suppressed(x, axis):
+    return jax.lax.pmax(x, axis)  # spmdlint: disable=RPR002
+
+
+def good(x, topo):
+    # collective addressing routed through the Topology contract
+    y = blocking.transpose_payload(x, topo)
+    return blocking.all_reduce_sum(y, topo), spmd.axis_index("proc")

@@ -1,0 +1,50 @@
+# lint-as: src/repro/core/fixture.py
+# RPR004: generator paths must be reproducible from the config seed —
+# no unseeded RNG, no global-state RNG, no wall clock.
+import random
+import time
+
+import numpy as np
+import numpy.random as npr
+from numpy.random import default_rng
+
+import jax
+
+
+def bad_wall_clock():
+    return time.time()  # expect: RPR004
+
+
+def bad_wall_clock_ns():
+    return time.time_ns()  # expect: RPR004
+
+
+def bad_stdlib_rng():
+    return random.random()  # expect: RPR004
+
+
+def bad_global_numpy():
+    return np.random.rand(4)  # expect: RPR004
+
+
+def bad_aliased_numpy():
+    return npr.randint(0, 10)  # expect: RPR004
+
+
+def bad_unseeded_generator():
+    return np.random.default_rng()  # expect: RPR004
+
+
+def bad_unseeded_from_import():
+    return default_rng()  # expect: RPR004
+
+
+def suppressed():
+    return time.time()  # spmdlint: disable=RPR004
+
+
+def good(seed: int):
+    rng = np.random.default_rng(seed)          # seeded: fine
+    key = jax.random.key(seed)                 # jax.random is always seeded
+    t0 = time.perf_counter()                   # timing != randomness
+    return rng, key, t0

@@ -1,0 +1,46 @@
+# lint-as: src/repro/core/fixture.py
+# RPR005: int32 casts of edge-count products must sit in a scope with an
+# overflow guard (the 1B-vertex configs overflow int32 at P * vpp * k).
+import numpy as np
+import jax.numpy as jnp
+
+INT32_MAX = 2**31 - 1
+
+
+def bad_cast(num_procs, edges_per_proc):
+    total = num_procs * edges_per_proc
+    return np.int32(num_procs * edges_per_proc)  # expect: RPR005
+
+
+def bad_jnp_cast(procs, edges_per_vertex, vpp):
+    return jnp.int32(procs * vpp * edges_per_vertex)  # expect: RPR005
+
+
+def bad_astype(num_edges, levels):
+    arr = np.arange(10)
+    return (arr * num_edges ** levels).astype(np.int32)  # expect: RPR005
+
+
+def bad_asarray(total_edges, reps):
+    return np.asarray(total_edges * reps, dtype=np.int32)  # expect: RPR005
+
+
+def suppressed(num_procs, edges_per_proc):
+    return np.int32(num_procs * edges_per_proc)  # spmdlint: disable=RPR005
+
+
+def good_guarded(num_procs, edges_per_proc):
+    total = num_procs * edges_per_proc
+    if total > INT32_MAX:
+        raise ValueError(f"edge count {total} overflows int32")
+    return np.int32(num_procs * edges_per_proc)
+
+
+def good_checked_helper(num_procs, edges_per_proc, _check_int32_total):
+    _check_int32_total(num_procs * edges_per_proc)
+    return np.int32(num_procs * edges_per_proc)
+
+
+def good_not_edge_count(rows, cols_pad):
+    # products of non-edge-named quantities are not this rule's business
+    return np.int32(rows * cols_pad)

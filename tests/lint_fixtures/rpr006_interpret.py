@@ -1,0 +1,25 @@
+# lint-as: benchmarks/fixture.py
+# RPR006: kernel call sites must not pin interpret= to a literal — the
+# REPRO_PALLAS probe (repro.kernels.dispatch) owns execution mode.
+from repro.kernels import ops
+from repro.kernels.histogram import histogram_pallas
+from repro.kernels.edge_resolve import resolve_step_pallas as resolve
+
+
+def bad_literal(values):
+    return histogram_pallas(values, 64, interpret=True)  # expect: RPR006
+
+
+def bad_aliased(ptr):
+    return resolve(ptr, interpret=False)  # expect: RPR006
+
+
+def suppressed(values):
+    return histogram_pallas(values, 64, interpret=True)  # spmdlint: disable=RPR006
+
+
+def good(values, ptr, flag):
+    a = histogram_pallas(values, 64)            # probe decides
+    b = resolve(ptr, interpret=None)            # explicit probe routing
+    c = histogram_pallas(values, 64, interpret=flag)  # dynamic: caller's call
+    return a, b, c, ops.histogram(values, 64)

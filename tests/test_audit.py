@@ -1,0 +1,193 @@
+"""Compiled-collective auditor: structural SPMD-uniformity checks.
+
+In-process (1 device): jaxpr-level structure of the real exchange programs
+— collective inventory, the streamed while_loop's all-reduced predicate —
+plus negative cases proving the auditor flags a raw (non-reduced) predicate
+and a collective hiding on one lax.cond branch. Nothing executes on
+devices: the audit is make_jaxpr/lower only.
+
+Multi-device (8 forced host devices, subprocess): the HLO-level pins that
+generalize test_weak_scaling's hand counts — flat topology compiles to
+exactly 2 all_to_alls, pods two-hop to 4 (2 contiguous + 2 strided replica
+groups) — and the full audit of the streamed plan comes back clean.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import api
+from repro.analysis import audit as audit_lib
+from repro.api import GraphSpec
+from repro.core import FactionSpec
+from repro.runtime import Topology, blocking, spmd
+
+from helpers import run_with_devices
+
+
+def _spec(procs, topo, **over):
+    base = dict(model="pba", procs=procs, vertices_per_proc=50,
+                edges_per_vertex=3, seed=7, pair_capacity=32,
+                factions=FactionSpec(1, 2, 2, seed=1),
+                topology=topo, execution="sharded")
+    base.update(over)
+    return GraphSpec(**base)
+
+
+def test_expected_all_to_alls():
+    assert audit_lib.expected_all_to_alls(Topology.flat(8), "exchange") == 2
+    assert audit_lib.expected_all_to_alls(Topology.pods(2, 4),
+                                          "exchange") == 4
+    assert audit_lib.expected_all_to_alls(Topology.flat(8),
+                                          "stream_round") == 1
+    assert audit_lib.expected_all_to_alls(Topology.pods(2, 4),
+                                          "stream_round") == 2
+
+
+def test_exchange_jaxpr_structure_single_shot():
+    """The single-shot exchange traces to exactly two all_to_alls (counts +
+    payload transposes) — statically, without executing on devices."""
+    pl = api.plan(_spec(2, Topology.flat(1)))
+    a = audit_lib.audit_exchange(pl, with_hlo=False)
+    assert a.ok, a.problems
+    assert a.jaxpr_collectives.get("all_to_all") == 2, a.jaxpr_collectives
+    # every while in the program is collective-free (urn resolution) here
+    for w in a.whiles:
+        assert not w.body_collectives
+        assert w.uniform_predicate
+
+
+def test_streamed_exchange_predicate_is_all_reduced():
+    """The acceptance pin: the streamed exchange's while_loop carries the
+    round's all_to_all, and the auditor statically verifies its predicate
+    reads only the round counter and the psum-reduced residual."""
+    pl = api.plan(_spec(2, Topology.flat(1), exchange_rounds=4))
+    a = audit_lib.audit_exchange(pl, with_hlo=False)
+    assert a.ok, a.problems
+    streamed = [w for w in a.whiles if w.body_collectives]
+    assert streamed, "streamed plan must carry a collective-bearing while"
+    for w in streamed:
+        assert w.body_collectives.get("all_to_all") == 1
+        assert w.body_collectives.get("psum") == 1
+        assert w.uniform_predicate, w.notes
+
+
+def test_audit_plan_streamed_covers_round_program(tmp_path):
+    pl = api.plan(_spec(2, Topology.flat(1), execution="streamed",
+                        exchange_rounds=4, sink="shards",
+                        out_dir=str(tmp_path)))
+    assert pl.executor == "pba_stream_sharded", pl.executor
+    audits = audit_lib.audit_plan(pl, with_hlo=False)
+    assert [a.program for a in audits] == ["exchange", "stream_round"]
+    for a in audits:
+        assert a.ok, (a.label, a.problems)
+
+
+def test_audit_plan_host_is_empty():
+    pl = api.plan(_spec(2, Topology.host(), execution="host"))
+    assert audit_lib.audit_plan(pl, with_hlo=False) == []
+
+
+def test_auditor_flags_raw_predicate():
+    """A while predicate reading a raw device-varying residual (no psum)
+    must fail the uniformity check — the deadlock shape the contract bans."""
+    topo = Topology.flat(1)
+    mesh = topo.build_mesh()
+
+    def prog(x):
+        def cond(s):
+            r, v = s
+            return (r < 5) & (v[0, 0, 0] > 0)  # raw: not all-reduced
+
+        def body(s):
+            r, v = s
+            return r + 1, blocking.transpose_payload(v, topo) - 1
+
+        _, v = jax.lax.while_loop(cond, body, (jnp.int32(0), x))
+        return v
+
+    f = jax.jit(spmd.shard_map(prog, mesh=mesh, in_specs=(P("proc"),),
+                               out_specs=P("proc"), check_vma=False))
+    x = jnp.ones((1, 1, 4), jnp.int32)
+    a = audit_lib.audit_program(f, (x,), topo, "bad/while", "stream_round",
+                                with_hlo=False)
+    assert not a.ok
+    assert any("not globally all-reduced" in p for p in a.problems)
+
+
+def test_auditor_flags_cond_branch_mismatch():
+    topo = Topology.flat(1)
+    mesh = topo.build_mesh()
+
+    def prog(x):
+        def yes(v):
+            return blocking.all_reduce_sum(v, topo)
+
+        def no(v):
+            return v
+
+        return jax.lax.cond(x.sum() > 0, yes, no, x.sum())
+
+    f = jax.jit(spmd.shard_map(prog, mesh=mesh, in_specs=(P("proc"),),
+                               out_specs=P(), check_vma=False))
+    x = jnp.ones((1, 1, 4), jnp.int32)
+    a = audit_lib.audit_program(f, (x,), topo, "bad/cond", "exchange",
+                                with_hlo=False)
+    assert a.cond_mismatches and not a.ok
+
+
+def test_inventory_json_round_trips():
+    pl = api.plan(_spec(2, Topology.flat(1), exchange_rounds=4))
+    a = audit_lib.audit_exchange(pl, with_hlo=False)
+    inv = audit_lib.inventory([a], extra={"devices": 1})
+    blob = json.loads(json.dumps(inv))
+    assert blob["ok"] is True
+    prog = blob["programs"][a.label]
+    assert prog["jaxpr_collectives"]["all_to_all"] == 2
+    assert any(w["body_collectives"] for w in prog["whiles"])
+
+
+# --- multi-device HLO pins (subprocess: XLA locks the device count) ----------
+
+def test_hlo_pins_flat_and_pods():
+    """flat = 2 all_to_alls, pods two-hop = 4 (2 contiguous + 2 strided),
+    verified on the compiled HLO of the real front-door plans at 8 devices
+    — the generalization of test_weak_scaling's hand-pinned counts."""
+    out = run_with_devices("""
+        from repro import api
+        from repro.analysis import audit as audit_lib
+        from repro.api import GraphSpec
+        from repro.core import FactionSpec
+        from repro.runtime import Topology
+
+        def spec(topo, **over):
+            base = dict(model="pba", procs=8, vertices_per_proc=50,
+                        edges_per_vertex=3, seed=7, pair_capacity=32,
+                        factions=FactionSpec(4, 2, 4, seed=1),
+                        topology=topo, execution="sharded")
+            base.update(over)
+            return GraphSpec(**base)
+
+        flat = audit_lib.audit_exchange(api.plan(spec(Topology.flat(8))))
+        assert flat.ok, flat.problems
+        assert flat.hlo_all_to_alls == 2, flat.hlo_span
+
+        pods = audit_lib.audit_exchange(api.plan(spec(Topology.pods(2, 4))))
+        assert pods.ok, pods.problems
+        assert pods.hlo_all_to_alls == 4, pods.hlo_span
+        assert pods.hlo_span["n_local"] == 2, pods.hlo_span
+        assert pods.hlo_span["n_cross"] == 2, pods.hlo_span
+
+        # streamed plan: full audit (exchange while + round program) clean
+        import tempfile
+        streamed = api.plan(spec(Topology.pods(2, 4), execution="streamed",
+                                 exchange_rounds=4, sink="shards",
+                                 out_dir=tempfile.mkdtemp()))
+        assert streamed.executor == "pba_stream_sharded", streamed.executor
+        for a in audit_lib.audit_plan(streamed):
+            assert a.ok, (a.label, a.problems)
+        print("OK")
+    """, 8)
+    assert "OK" in out

@@ -1,0 +1,137 @@
+"""spmdlint: fixture corpus per rule ID, alias resolution, suppressions,
+config loading, and the repo self-lint.
+
+Fixture convention (tests/lint_fixtures/*.py): the first line declares the
+repo-relative path the snippet should be linted *as* (``# lint-as: ...`` —
+rule scopes key off directories), and every line that must be flagged
+carries a trailing ``# expect: RPRxxx`` comment. The harness compares the
+exact {(line, rule)} sets, so both false negatives (a dodge the linter
+misses) and false positives (clean idioms flagged) fail loudly.
+"""
+import ast
+import pathlib
+import re
+
+import pytest
+
+from repro.analysis import (LintConfig, ImportTable, Violation, all_rules,
+                            lint_repo, lint_source, load_config)
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = sorted((pathlib.Path(__file__).parent / "lint_fixtures"
+                   ).glob("*.py"))
+LINT_AS_RE = re.compile(r"#\s*lint-as:\s*(\S+)")
+EXPECT_RE = re.compile(r"#\s*expect:\s*(RPR\d+)")
+
+
+def _fixture_expectations(source: str):
+    expected = set()
+    for lineno, line in enumerate(source.splitlines(), 1):
+        for rule_id in EXPECT_RE.findall(line):
+            expected.add((lineno, rule_id))
+    m = LINT_AS_RE.search(source)
+    assert m, "fixture must declare '# lint-as: <repo-relative path>'"
+    return m.group(1), expected
+
+
+@pytest.mark.parametrize("path", FIXTURES, ids=lambda p: p.stem)
+def test_fixture_corpus(path):
+    source = path.read_text()
+    lint_as, expected = _fixture_expectations(source)
+    assert expected, f"{path.name}: no '# expect:' annotations"
+    got = {(v.line, v.rule)
+           for v in lint_source(source, lint_as, all_rules())}
+    missing = expected - got
+    unexpected = got - expected
+    assert not missing, f"{path.name}: violations not caught: {missing}"
+    assert not unexpected, (
+        f"{path.name}: false positives (or move the expect tag): "
+        f"{unexpected}")
+
+
+def test_self_lint_repo_clean():
+    """The acceptance gate: `python -m repro.analysis` exits 0 on the repo.
+    Every violation is either fixed or carries an explained suppression."""
+    violations = lint_repo(str(REPO))
+    assert not violations, "\n".join(v.format() for v in violations)
+
+
+def test_fixtures_not_in_lint_scope():
+    """The fixture corpus is full of deliberate violations; the configured
+    repo lint (paths from pyproject) must never pick it up."""
+    assert not any("lint_fixtures" in v.path for v in lint_repo(str(REPO)))
+
+
+# --- engine units ------------------------------------------------------------
+
+def _resolve(source: str, expr: str):
+    tree = ast.parse(source + "\n_probe = " + expr)
+    table = ImportTable("repro.core.fixture").collect(tree)
+    probe = tree.body[-1].value
+    return table.resolve(probe)
+
+
+def test_import_alias_resolution():
+    assert _resolve("import jax.lax as L", "L.psum") == "jax.lax.psum"
+    assert _resolve("from jax.lax import all_to_all as a2a",
+                    "a2a") == "jax.lax.all_to_all"
+    assert _resolve("import jax", "jax.lax.psum") == "jax.lax.psum"
+    assert _resolve("from jax import lax",
+                    "lax.axis_index") == "jax.lax.axis_index"
+    assert _resolve("import numpy as np",
+                    "np.random.default_rng") == "numpy.random.default_rng"
+    assert _resolve("import jax", "unbound.name") is None
+
+
+def test_relative_import_resolution():
+    # from . import stream (inside repro.core.fixture) -> repro.core.stream
+    assert _resolve("from . import stream",
+                    "stream.PBAStream") == "repro.core.stream.PBAStream"
+    assert _resolve("from ..runtime import spmd",
+                    "spmd.shard_map") == "repro.runtime.spmd.shard_map"
+
+
+def test_suppression_is_line_scoped():
+    src = ("import jax\n"
+           "a = jax.lax.psum(1, 'proc')  # spmdlint: disable=RPR002\n"
+           "b = jax.lax.psum(1, 'proc')\n")
+    got = lint_source(src, "src/repro/core/x.py", all_rules())
+    assert [(v.line, v.rule) for v in got] == [(3, "RPR002")]
+
+
+def test_suppression_wrong_rule_does_not_mask():
+    src = ("import jax\n"
+           "a = jax.lax.psum(1, 'proc')  # spmdlint: disable=RPR001\n")
+    got = lint_source(src, "src/repro/core/x.py", all_rules())
+    assert [(v.line, v.rule) for v in got] == [(2, "RPR002")]
+
+
+def test_rule_scoping():
+    src = "import jax\na = jax.lax.psum(1, 'proc')\n"
+    # runtime/ is the sanctioned home of raw collectives
+    assert not lint_source(src, "src/repro/runtime/x.py", all_rules())
+    # tests/ are outside every rule's scope
+    assert not lint_source(src, "tests/x.py", all_rules())
+    assert lint_source(src, "src/repro/core/x.py", all_rules())
+
+
+def test_syntax_error_reported_not_raised():
+    got = lint_source("def broken(:\n", "src/repro/core/x.py", all_rules())
+    assert [v.rule for v in got] == ["RPR000"]
+
+
+def test_config_loaded_from_pyproject():
+    cfg = load_config(str(REPO))
+    assert "src" in cfg.paths
+    assert isinstance(cfg, LintConfig)
+
+
+def test_violation_formats():
+    from repro.analysis.cli import format_violations
+    v = Violation("RPR001", "src/x.py", 3, 7, "msg")
+    assert format_violations([v], "text") == "src/x.py:3:7: RPR001 msg"
+    gh = format_violations([v], "github")
+    assert gh.startswith("::error file=src/x.py,line=3,")
+    assert "RPR001" in gh
+    import json
+    assert json.loads(format_violations([v], "json"))[0]["rule"] == "RPR001"

@@ -5,7 +5,6 @@ devices in subprocesses) and pins the repo-wide invariant that only
 ``repro.runtime`` touches JAX's raw shard_map / mesh-typing APIs.
 """
 import pathlib
-import re
 
 import numpy as np
 import pytest
@@ -24,30 +23,13 @@ SRC = REPO / "src"
 
 def test_no_raw_shard_map_outside_runtime():
     """Only src/repro/runtime/ may reference the raw version-drifting APIs
-    and the raw collective-addressing APIs (all_to_all / axis_index)."""
-    raw = re.compile(
-        r"jax\s*\.\s*(experimental\s*\.\s*)?shard_map"
-        r"|jax\s*\.\s*make_mesh"
-        r"|jax\.sharding\.AxisType"
-        # collective addressing is the runtime layer's job: a raw
-        # all_to_all/axis_index call sidesteps the Topology contract
-        r"|jax\s*\.\s*lax\s*\.\s*all_to_all"
-        r"|jax\s*\.\s*lax\s*\.\s*axis_index"
-        r"|\blax\s*\.\s*(all_to_all|axis_index)\s*\("
-        # from-import spellings of the same drifting APIs
-        r"|from\s+jax(\.experimental(\.shard_map)?)?\s+import\s+[^\n]*"
-        r"\bshard_map\b"
-        r"|from\s+jax\s+import\s+[^\n]*\bmake_mesh\b"
-        r"|from\s+jax\.lax\s+import\s+[^\n]*\b(all_to_all|axis_index)\b"
-        r"|from\s+jax\.sharding\s+import\s+[^\n]*\bAxisType\b")
-    offenders = []
-    for path in sorted(SRC.rglob("*.py")):
-        rel = path.relative_to(SRC)
-        if rel.parts[:2] == ("repro", "runtime"):
-            continue
-        for lineno, line in enumerate(path.read_text().splitlines(), 1):
-            if raw.search(line):
-                offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    and the raw collective-addressing APIs. Enforced by the AST linter
+    (repro.analysis rules RPR001/RPR002) — unlike the regex this replaced,
+    it resolves import aliases (``from jax.lax import all_to_all as a2a``,
+    ``import jax.lax as L``) and ignores docstrings/comments."""
+    from repro.analysis import lint_repo
+    offenders = [v.format() for v in lint_repo(str(REPO))
+                 if v.rule in ("RPR001", "RPR002")]
     assert not offenders, (
         "raw shard_map/mesh/collective APIs outside repro.runtime (route "
         "through repro.runtime.spmd / blocking):\n" + "\n".join(offenders))
@@ -56,17 +38,11 @@ def test_no_raw_shard_map_outside_runtime():
 def test_front_door_only_outside_src():
     """examples/, benchmarks/ and scripts/ must go through the repro.api
     front door (GraphSpec -> plan -> generate): the legacy per-model entry
-    points and stream drivers are internal executors, not public surface."""
-    banned = re.compile(
-        r"\b(generate_pba_sharded|generate_pba_host|generate_pk_host"
-        r"|PBAStream|PKStream|stream_to_shards)\b")
-    offenders = []
-    for d in ("examples", "benchmarks", "scripts"):
-        for path in sorted((REPO / d).rglob("*.py")):
-            rel = path.relative_to(REPO)
-            for lineno, line in enumerate(path.read_text().splitlines(), 1):
-                if banned.search(line):
-                    offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    points and stream drivers are internal executors, not public surface.
+    Enforced by AST linter rule RPR003 (import-alias aware)."""
+    from repro.analysis import lint_repo
+    offenders = [v.format() for v in lint_repo(str(REPO))
+                 if v.rule == "RPR003"]
     assert not offenders, (
         "legacy generator entry points outside src/ (build a "
         "repro.api.GraphSpec and go through plan/generate):\n"

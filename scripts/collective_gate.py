@@ -35,6 +35,13 @@ mechanical checks:
      compiled program is a reviewed, intentional diff (delete the baseline
      to re-baseline after one).
 
+  5. Kernel inventory drift (repro.analysis.kernelcheck): pallascheck's
+     static checks must pass over the registry, and the structural view of
+     its inventory (grids, block shapes, VMEM estimates, derived caps) must
+     match the committed results/kernel_audit_baseline.json exactly — a
+     grid or BlockSpec change in a Pallas kernel is a reviewed diff (delete
+     the baseline to re-baseline after one).
+
 Exits 0 with a notice when the backend offers no cost analysis.
 
 Usage (see scripts/verify.sh):
@@ -62,6 +69,9 @@ BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 AUDIT_BASELINE = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "results", "collective_audit_baseline.json")
+KERNEL_BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "kernel_audit_baseline.json")
 TOLERANCE = 0.25  # fractional drift allowed before the gate trips
 
 # Pod-scale reference: the paper's 1000 MPI ranks as logical processors
@@ -226,7 +236,12 @@ def main() -> int:
             json.dump(base, f, indent=2)
 
     # --- 4: compiled-collective audit + instruction-count drift -------------
-    return audit_gate(n_dev, topos)
+    rc = audit_gate(n_dev, topos)
+    if rc:
+        return rc
+
+    # --- 5: kernel inventory drift ------------------------------------------
+    return kernel_gate()
 
 
 def audit_gate(n_dev: int, topos: list) -> int:
@@ -302,6 +317,52 @@ def audit_gate(n_dev: int, topos: list) -> int:
         with open(AUDIT_BASELINE, "w") as f:
             json.dump(base, f, indent=2)
     print(f"collective gate OK: audit counts match {AUDIT_BASELINE}")
+    return 0
+
+
+def kernel_gate() -> int:
+    """pallascheck over the kernel registry (static checks only — the
+    differential sanitizer runs in its own verify leg), then the
+    structural view of the inventory diffed against the committed
+    baseline. ANY structural difference fails: a kernel's grid, block
+    shapes, VMEM estimate, or derived cap only moves via a reviewed
+    re-commit of the baseline."""
+    from repro.analysis import kernelcheck
+
+    findings, inv = kernelcheck.run_registry(execute=False)
+    for f in findings:
+        print(f"collective gate FAILED: pallascheck {f.format()}",
+              file=sys.stderr)
+    if findings:
+        return 1
+    n_cases = sum(len(k["cases"]) for k in inv["kernels"].values())
+    print(f"collective gate: pallascheck clean over "
+          f"{len(inv['kernels'])} kernel(s), {n_cases} case(s)")
+
+    view = kernelcheck.structural_view(inv)
+    if not os.path.exists(KERNEL_BASELINE):
+        os.makedirs(os.path.dirname(KERNEL_BASELINE), exist_ok=True)
+        with open(KERNEL_BASELINE, "w") as f:
+            json.dump(inv, f, indent=2)
+        print(f"collective gate: wrote new kernel baseline "
+              f"{KERNEL_BASELINE} ({sorted(inv['kernels'])})")
+        return 0
+
+    with open(KERNEL_BASELINE) as f:
+        base = json.load(f)
+    drift = kernelcheck.diff_paths(kernelcheck.structural_view(base), view)
+    if drift:
+        for path in drift[:20]:
+            print(f"collective gate FAILED: kernel inventory drift at "
+                  f"{path}", file=sys.stderr)
+        if len(drift) > 20:
+            print(f"collective gate FAILED: ... and {len(drift) - 20} more "
+                  "drifted path(s)", file=sys.stderr)
+        print("collective gate FAILED: a Pallas kernel's grid/BlockSpec/"
+              "VMEM structure changed — if intentional, delete "
+              f"{KERNEL_BASELINE} to re-baseline", file=sys.stderr)
+        return 1
+    print(f"collective gate OK: kernel inventory matches {KERNEL_BASELINE}")
     return 0
 
 

@@ -6,10 +6,13 @@
 # statically (python -m repro.analysis), the test run covers the
 # single-device suite, the smoke pass exercises the real distributed paths
 # (shard_map collectives, blocked/streamed transposes, tail masking) on 8
-# forced host devices, the compiled-collective audit re-derives the
-# all_to_all structure of every front-door program from its jaxpr/HLO, and
-# the collective gate fails on exchange-volume regressions and audit-count
-# drift against results/collective_audit_baseline.json.
+# forced host devices, pallascheck statically certifies every registered
+# pl.pallas_call (grid/BlockSpec partition + race, VMEM budget) and runs
+# the interpret-vs-ref differential, the compiled-collective audit
+# re-derives the all_to_all structure of every front-door program from its
+# jaxpr/HLO, and the collective gate fails on exchange-volume regressions,
+# audit-count drift, and kernel-inventory drift against the committed
+# results/ baselines.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -152,6 +155,9 @@ with tempfile.TemporaryDirectory() as d:
     assert "spec_digest" in man["meta"]
 print("front door OK")
 PY
+
+echo "== pallascheck: kernel registry (interpret differential) =="
+REPRO_PALLAS=interpret python -m repro.analysis kernels
 
 echo "== compiled-collective audit =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \

@@ -1,6 +1,6 @@
 """Static analysis for the repo's SPMD invariants.
 
-Two layers (see ISSUE 6 / README "Invariants & static analysis"):
+Three layers (see README "Invariants & static analysis"):
 
   spmdlint (:mod:`repro.analysis.linter` + :mod:`repro.analysis.rules`) —
   an AST lint pass over the source invariants: raw shard_map/mesh APIs and
@@ -15,8 +15,19 @@ Two layers (see ISSUE 6 / README "Invariants & static analysis"):
   cond branches, all-reduced while_loop predicates, and all_to_all counts
   matching the declared Topology. Imports JAX lazily, on first use.
 
+  pallascheck (:mod:`repro.analysis.kernelcheck`) — a static grid/BlockSpec
+  verifier over the kernel registry (repro.kernels.registry): captures every
+  pl.pallas_call under jax.eval_shape (never lowering), proves the output
+  blocks partition the padded output with no non-consecutive revisits (the
+  grid-race detector), bounds every block index, estimates the per-grid-step
+  VMEM working set against the per-backend budget that derives
+  MAX_VMEM_ENTRIES, checks shape/dtype parity against the ref.py oracles,
+  and differentially sanitizes interpret mode vs the oracles on seeded
+  inputs. Imports JAX lazily, on first use.
+
 CLI: ``python -m repro.analysis`` (lint) / ``python -m repro.analysis
-audit``; thin wrapper at scripts/lint.py.
+audit`` / ``python -m repro.analysis kernels``; thin wrapper at
+scripts/lint.py.
 """
 from repro.analysis.linter import (DEFAULT_PATHS, ImportTable, LintConfig,
                                    Violation, find_repo_root, lint_paths,

@@ -1,6 +1,6 @@
 """Command line for the static-analysis subsystem.
 
-  python -m repro.analysis [paths...] [--format text|github|json]
+  python -m repro.analysis [paths...] [--format text|github|json|sarif]
       lint the repo's configured paths (exit 1 on any violation)
 
   python -m repro.analysis audit [--out FILE] [--no-hlo]
@@ -9,6 +9,13 @@
       any structural problem). Run under forced host devices to audit
       multi-device structure, e.g.
       XLA_FLAGS=--xla_force_host_platform_device_count=8.
+
+  python -m repro.analysis kernels [--out FILE] [--backend B]
+                                   [--static-only]
+      pallascheck: statically verify every registered pl.pallas_call
+      (grid/BlockSpec partition + race, VMEM working set vs budget,
+      ref-oracle parity, interpret differential) and emit the kernel
+      inventory JSON the drift gate diffs. Exit 1 on any finding.
 
 The lint path imports no JAX — it stays fast enough for a pre-commit hook.
 """
@@ -30,7 +37,51 @@ def format_violations(violations: Sequence[Violation], fmt: str) -> str:
             f"title={v.rule}::{v.message}" for v in violations)
     if fmt == "json":
         return json.dumps([vars(v) for v in violations], indent=2)
+    if fmt == "sarif":
+        return json.dumps(_sarif(violations), indent=2)
     return "\n".join(v.format() for v in violations)
+
+
+def _sarif(violations: Sequence[Violation]) -> dict:
+    """SARIF 2.1.0 log for code-scanning upload (one run, tool spmdlint)."""
+    from repro.analysis.rules import all_rules
+    return {
+        "$schema": ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                    "master/Schemata/sarif-schema-2.1.0.json"),
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": "spmdlint",
+                "informationUri": "https://example.invalid/repro/analysis",
+                "rules": [{"id": r.id,
+                           "shortDescription": {"text": r.title}}
+                          for r in all_rules()],
+            }},
+            "results": [{
+                "ruleId": v.rule,
+                "level": "error",
+                "message": {"text": v.message},
+                "locations": [{"physicalLocation": {
+                    "artifactLocation": {"uri": v.path},
+                    "region": {"startLine": v.line,
+                               "startColumn": v.col + 1},
+                }}],
+            } for v in violations],
+        }],
+    }
+
+
+def _validate_out(ap: argparse.ArgumentParser, out: Optional[str]) -> None:
+    """Fail --out fast (before JAX import / long traces) when the target
+    cannot be written: nonexistent or unwritable parent directory."""
+    if out is None:
+        return
+    import os
+    parent = os.path.dirname(os.path.abspath(out))
+    if not os.path.isdir(parent):
+        ap.error(f"--out {out}: parent directory {parent} does not exist")
+    if not os.access(parent, os.W_OK):
+        ap.error(f"--out {out}: parent directory {parent} is not writable")
 
 
 def lint_main(argv: Optional[Sequence[str]] = None) -> int:
@@ -39,7 +90,7 @@ def lint_main(argv: Optional[Sequence[str]] = None) -> int:
         description="spmdlint: SPMD invariant linter (rules RPR001..)")
     ap.add_argument("paths", nargs="*",
                     help="repo-relative paths (default: pyproject config)")
-    ap.add_argument("--format", choices=("text", "github", "json"),
+    ap.add_argument("--format", choices=("text", "github", "json", "sarif"),
                     default="text")
     ap.add_argument("--root", default=None,
                     help="repo root (default: nearest pyproject.toml)")
@@ -65,6 +116,8 @@ def lint_main(argv: Optional[Sequence[str]] = None) -> int:
         return 1
     if ns.format == "json":
         print("[]")
+    elif ns.format == "sarif":
+        print(json.dumps(_sarif(())))
     else:
         print("spmdlint: clean")
     return 0
@@ -79,6 +132,7 @@ def audit_main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--no-hlo", action="store_true",
                     help="jaxpr-level checks only (no compile)")
     ns = ap.parse_args(argv)
+    _validate_out(ap, ns.out)
 
     import jax
 
@@ -102,13 +156,13 @@ def audit_main(argv: Optional[Sequence[str]] = None) -> int:
             topology=topo, execution="sharded")
         audits.append(audit_lib.audit_exchange(
             api.plan(spec), with_hlo=not ns.no_hlo))
-        # streamed config: the residual while_loop + per-round program
-        streamed = api.plan(spec.replace(execution="streamed",
-                                         exchange_rounds=4))
+        # multi-round + streamed configs share one r4 spec (planned once
+        # per execution mode: the residual while_loop + per-round program)
+        r4 = spec.replace(exchange_rounds=4)
         audits.append(audit_lib.audit_exchange(
-            api.plan(spec.replace(exchange_rounds=4)),
-            with_hlo=not ns.no_hlo,
+            api.plan(r4), with_hlo=not ns.no_hlo,
             label=f"{topo.label}/exchange_r4"))
+        streamed = api.plan(r4.replace(execution="streamed"))
         if streamed.executor == "pba_stream_sharded":
             audits.append(audit_lib.audit_stream_round(
                 streamed, with_hlo=not ns.no_hlo))
@@ -131,8 +185,50 @@ def audit_main(argv: Optional[Sequence[str]] = None) -> int:
     return rc
 
 
+def kernels_main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis kernels",
+        description="pallascheck: static grid/BlockSpec race & VMEM "
+                    "verifier over the kernel registry")
+    ap.add_argument("--out", default=None,
+                    help="write the kernel inventory JSON here")
+    ap.add_argument("--backend", default="tpu",
+                    help="VMEM budget model to check against (default: tpu)")
+    ap.add_argument("--static-only", action="store_true",
+                    help="skip the interpret-vs-ref differential sanitizer")
+    ns = ap.parse_args(argv)
+    _validate_out(ap, ns.out)
+
+    from repro.analysis import kernelcheck
+
+    findings, inv = kernelcheck.run_registry(backend=ns.backend,
+                                             execute=not ns.static_only)
+    if ns.out:
+        with open(ns.out, "w") as f:
+            json.dump(inv, f, indent=2)
+        print(f"pallascheck: wrote {ns.out}")
+    n_cases = sum(len(k["cases"]) for k in inv["kernels"].values())
+    n_calls = sum(len(c["calls"]) for k in inv["kernels"].values()
+                  for c in k["cases"].values())
+    print(f"pallascheck: {len(inv['kernels'])} kernel(s), {n_cases} "
+          f"case(s), {n_calls} pallas_call(s) against "
+          f"{inv['budget']['vmem_bytes']} B VMEM budget "
+          f"({inv['budget']['backend']})")
+    for event, count in sorted(inv["fallback_events"].items()):
+        print(f"pallascheck: fallback {event}: {count} trace(s)")
+    if findings:
+        for f in findings:
+            print(f"pallascheck FAIL {f.format()}", file=sys.stderr)
+        print(f"pallascheck: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    print("pallascheck: clean")
+    return 0
+
+
 def main(argv: Optional[Sequence[str]] = None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     if argv and argv[0] == "audit":
         return audit_main(argv[1:])
+    if argv and argv[0] == "kernels":
+        return kernels_main(argv[1:])
     return lint_main(argv)

@@ -8,6 +8,7 @@ Rule IDs are stable (they appear in suppression comments and CI output):
   RPR004  nondeterminism in generator device code (unseeded RNG, wall clock)
   RPR005  unguarded int32 casts of edge-count products (overflow seams)
   RPR006  hardcoded interpret= at Pallas kernel call sites
+  RPR007  pl.pallas_call outside src/repro/kernels/ (pallascheck seam)
 
 Each rule declares the repo-relative directory prefixes it polices
 (``include``) and carve-outs (``exclude``); scopes are invariant
@@ -331,9 +332,30 @@ class HardcodedInterpretRule(Rule):
                     "repro.kernels.dispatch resolves the probed mode")
 
 
+class PallasCallSeamRule(BannedPathRule):
+    """RPR007: every pl.pallas_call lives in src/repro/kernels/ — that is
+    the seam pallascheck's registry certifies (grid/BlockSpec race, VMEM
+    budget, ref parity). A pallas_call elsewhere is invisible to the
+    static verifier and to the kernel-inventory drift gate."""
+
+    id = "RPR007"
+    title = "pl.pallas_call outside src/repro/kernels/"
+    include = ("src", "examples", "benchmarks", "scripts")
+    exclude = ("src/repro/kernels",)
+    TARGETS = ("jax.experimental.pallas.pallas_call",)
+
+    def banned(self, path: str) -> Optional[str]:
+        if _matches(path, self.TARGETS):
+            return ("pallas_call outside src/repro/kernels — kernels live "
+                    "behind the registry so pallascheck "
+                    "(python -m repro.analysis kernels) can certify them")
+        return None
+
+
 def all_rules() -> list[Rule]:
     return [RawShardMapRule(), RawCollectiveRule(), FrontDoorRule(),
-            DeterminismRule(), Int32OverflowRule(), HardcodedInterpretRule()]
+            DeterminismRule(), Int32OverflowRule(), HardcodedInterpretRule(),
+            PallasCallSeamRule()]
 
 
 def rules_by_id(ids: Iterable[str]) -> list[Rule]:

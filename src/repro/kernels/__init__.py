@@ -3,4 +3,164 @@
 Each kernel module provides a pl.pallas_call with explicit BlockSpec VMEM
 tiling; ops.py holds the jitted dispatch wrappers; ref.py the pure-jnp
 oracles that tests sweep against.
+
+This package also hosts the **kernel registry** pallascheck introspects
+(``python -m repro.analysis kernels``): every registered entry names a
+kernel entry point, a swept size grid, and its ref.py oracle, so the
+static grid/BlockSpec race and VMEM checks (repro.analysis.kernelcheck)
+cover every pl.pallas_call the library can issue without executing on a
+TPU. The module stays import-light — registry builders import JAX (and
+the kernel modules) lazily, on first use.
 """
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCase:
+    """One concrete (kernel entry point, example inputs, oracle) triple.
+
+    ``fn`` takes only array arguments (static shape parameters are closed
+    over) plus a pass-through ``interpret=`` keyword; ``ref`` shares the
+    array signature. ``execute`` marks sizes small enough for the
+    interpret-vs-ref differential sanitizer (static checks always run).
+    """
+
+    fn: Callable
+    args: tuple
+    ref: Optional[Callable]
+    label: str
+    execute: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelEntry:
+    """One registered kernel: ``build(**size)`` -> KernelCase per swept size.
+
+    ``sizes`` is a zero-arg callable (sizes may depend on derived bounds
+    like edge_resolve's MAX_VMEM_ENTRIES); ``meta`` contributes static
+    facts — derived caps, fallback policy — to pallascheck's inventory.
+    """
+
+    name: str
+    build: Callable
+    sizes: Callable
+    meta: Optional[Callable] = None
+
+
+# --- edge_resolve ------------------------------------------------------------
+
+def _edge_resolve_case(m: int) -> KernelCase:
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.edge_resolve import resolve_step_pallas
+
+    rng = np.random.default_rng(1000 + m)
+    ptr = jnp.asarray(rng.integers(0, m, m), jnp.int32)
+    return KernelCase(
+        fn=lambda p, interpret=None: resolve_step_pallas(p,
+                                                         interpret=interpret),
+        args=(ptr,), ref=ref.resolve_step_ref, label=f"m{m}",
+        execute=m <= 8192)
+
+
+def _edge_resolve_sizes() -> tuple:
+    from repro.kernels.edge_resolve import MAX_VMEM_ENTRIES
+    return ({"m": 1}, {"m": 127}, {"m": 4097}, {"m": MAX_VMEM_ENTRIES})
+
+
+def _edge_resolve_meta() -> dict:
+    from repro.kernels.edge_resolve import BLOCK, MAX_VMEM_ENTRIES
+    return {
+        "block": BLOCK,
+        "max_vmem_entries": MAX_VMEM_ENTRIES,
+        "oversize_fallback": (
+            "ops.resolve_step routes arrays past max_vmem_entries to the "
+            "jnp reference (no hierarchical chunking yet); trace-time "
+            "events counted in "
+            "repro.kernels.ops.FALLBACK_EVENTS['resolve_step_oversize']"),
+    }
+
+
+# --- histogram ---------------------------------------------------------------
+
+def _histogram_case(m: int, nbins: int) -> KernelCase:
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.histogram import histogram_pallas
+
+    rng = np.random.default_rng(m * 31 + nbins)
+    v = jnp.asarray(rng.integers(0, nbins, m), jnp.int32)
+    return KernelCase(
+        fn=lambda v_, interpret=None: histogram_pallas(v_, nbins,
+                                                       interpret=interpret),
+        args=(v,), ref=lambda v_: ref.histogram_ref(v_, nbins),
+        label=f"m{m}_b{nbins}", execute=m <= 8192)
+
+
+def _histogram_sizes() -> tuple:
+    return ({"m": 1, "nbins": 1}, {"m": 2048, "nbins": 512},
+            {"m": 5003, "nbins": 700}, {"m": 65536, "nbins": 1537})
+
+
+# --- pk_expand ---------------------------------------------------------------
+
+def _pk_expand_case(m: int, n0: int, levels: int, noise: bool) -> KernelCase:
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core.pk import decompose_base, star_clique_seed
+    from repro.kernels import ref
+    from repro.kernels.pk_expand import pk_expand_pallas
+
+    seed = star_clique_seed(n0)
+    e0 = seed.num_edges
+    rng = np.random.default_rng(m * 13 + n0 * 7 + levels)
+    hi = min(e0 ** levels, 2**31 - 1)
+    t = jnp.asarray(rng.integers(0, max(hi - m, 1), m), jnp.int32)
+    base = jnp.asarray(decompose_base(int(rng.integers(0, max(hi // 2, 1))),
+                                      e0, levels))
+    su, sv = jnp.asarray(seed.u), jnp.asarray(seed.v)
+    label = f"m{m}_n{n0}_L{levels}"
+    if noise:
+        flip = jnp.asarray(rng.random((levels, m)) < 0.3)
+        redraw = jnp.asarray(rng.integers(0, e0, (levels, m)), jnp.int32)
+        return KernelCase(
+            fn=lambda t_, b_, u_, v_, f_, r_, interpret=None:
+                pk_expand_pallas(t_, b_, u_, v_, n0, e0, levels, f_, r_,
+                                 interpret=interpret),
+            args=(t, base, su, sv, flip, redraw),
+            ref=lambda t_, b_, u_, v_, f_, r_:
+                ref.pk_expand_ref(t_, b_, u_, v_, n0, e0, levels, f_, r_),
+            label=label + "_noise")
+    return KernelCase(
+        fn=lambda t_, b_, u_, v_, interpret=None:
+            pk_expand_pallas(t_, b_, u_, v_, n0, e0, levels,
+                             interpret=interpret),
+        args=(t, base, su, sv),
+        ref=lambda t_, b_, u_, v_:
+            ref.pk_expand_ref(t_, b_, u_, v_, n0, e0, levels),
+        label=label)
+
+
+def _pk_expand_sizes() -> tuple:
+    return ({"m": 100, "n0": 3, "levels": 2, "noise": False},
+            {"m": 3000, "n0": 5, "levels": 4, "noise": False},
+            {"m": 2048, "n0": 6, "levels": 3, "noise": True})
+
+
+def registry() -> tuple[KernelEntry, ...]:
+    """Every Pallas kernel entry point the library can issue, with the
+    size sweep pallascheck certifies it over."""
+    return (
+        KernelEntry("edge_resolve", _edge_resolve_case, _edge_resolve_sizes,
+                    _edge_resolve_meta),
+        KernelEntry("histogram", _histogram_case, _histogram_sizes),
+        KernelEntry("pk_expand", _pk_expand_case, _pk_expand_sizes),
+    )

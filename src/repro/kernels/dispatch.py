@@ -16,6 +16,22 @@ import os
 
 import jax
 
+# --- VMEM budget model -------------------------------------------------------
+# One derived number replaces per-kernel hand-maintained size caps: a kernel
+# call's working set (resident blocks + double-buffered gridded blocks, see
+# repro.analysis.kernelcheck) must fit the budget. TPU cores carry ~16 MiB of
+# VMEM; half is reserved for Mosaic scratch/pipelining headroom. Non-TPU
+# backends model the TPU target — interpret/reference runs have no VMEM, but
+# the static checks exist to certify the kernel for the hardware it will
+# eventually compile to.
+VMEM_BYTES = {"tpu": 16 * 2**20}
+VMEM_SAFETY = 0.5
+
+
+def vmem_budget_bytes(backend: str = "tpu") -> int:
+    """Per-kernel-call VMEM working-set budget in bytes for ``backend``."""
+    return int(VMEM_BYTES.get(backend, VMEM_BYTES["tpu"]) * VMEM_SAFETY)
+
 
 def mode() -> str:
     """'interpret' | 'off' | 'tpu' — forced by REPRO_PALLAS, else probed."""

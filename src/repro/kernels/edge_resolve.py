@@ -3,8 +3,18 @@
 ptr'[j] = ptr[ptr[j]] — a full-array dynamic gather. The source array stays
 VMEM-resident (un-blocked spec) while destinations are gridded; the gather is
 expressed as jnp.take, which Mosaic lowers to a dynamic gather on current
-TPU toolchains. VMEM bounds the per-call size to ~2M int32 entries; the ops.py
-wrapper asserts this and the PBA resolver chunks larger urns hierarchically.
+TPU toolchains.
+
+VMEM bounds the per-call size: the resident source plus the double-buffered
+destination/output blocks must fit the per-backend budget
+(``repro.kernels.dispatch.vmem_budget_bytes``), which derives
+``MAX_VMEM_ENTRIES`` below (~2M int32 entries). Above that bound
+``ops.resolve_step`` does NOT chunk hierarchically (yet — see the ROADMAP's
+Pallas-hot-path item): it falls back to the pure-jnp reference for the whole
+array. The fallback is counted at trace time in
+``repro.kernels.ops.FALLBACK_EVENTS['resolve_step_oversize']`` and reported
+by pallascheck's inventory (``python -m repro.analysis kernels``), so the
+future chunking PR replaces an observable event, not a silent detour.
 """
 from __future__ import annotations
 
@@ -12,10 +22,24 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.dispatch import default_interpret
+from repro.kernels.dispatch import default_interpret, vmem_budget_bytes
 
 BLOCK = 8 * 128
-MAX_VMEM_ENTRIES = 2 * 1024 * 1024  # 8 MiB of int32 for the resident source
+
+
+def max_resident_entries(backend: str = "tpu") -> int:
+    """Largest int32 entry count whose working set fits the VMEM budget.
+
+    Working set = 4 bytes x m_pad resident source + two double-buffered
+    (1, BLOCK) int32 blocks (destination indices in, gathered values out);
+    floored to a whole number of BLOCKs since the call pads to BLOCK.
+    """
+    budget = vmem_budget_bytes(backend)
+    overhead = 2 * 2 * BLOCK * 4  # double-buffered in + out blocks
+    return max((budget - overhead) // 4 // BLOCK * BLOCK, BLOCK)
+
+
+MAX_VMEM_ENTRIES = max_resident_entries()  # ~2M entries: 8 MiB resident int32
 
 
 def _resolve_kernel(src_ref, idx_ref, out_ref):

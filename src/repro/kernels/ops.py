@@ -14,6 +14,7 @@ never disagree about execution mode.
 from __future__ import annotations
 
 import functools
+import logging
 
 import jax
 import jax.numpy as jnp
@@ -61,8 +62,44 @@ def histogram(values: jax.Array, num_bins: int) -> jax.Array:
     return histogram_pallas(values, num_bins)
 
 
+_log = logging.getLogger(__name__)
+
+#: Trace-time kernel-fallback counters, by event name. A dispatch wrapper
+#: that wanted the Pallas kernel but had to route to the jnp reference
+#: (e.g. an urn past the VMEM bound) increments its event here, once per
+#: trace — the decision is made on static shapes, so one count corresponds
+#: to one compiled program, not one execution. pallascheck's inventory
+#: (``python -m repro.analysis kernels``) reports these so capacity
+#: fallbacks stay observable instead of silent.
+FALLBACK_EVENTS: dict[str, int] = {}
+
+
+def _record_fallback(event: str, detail: str) -> None:
+    FALLBACK_EVENTS[event] = FALLBACK_EVENTS.get(event, 0) + 1
+    _log.info("kernel fallback %s: %s", event, detail)
+
+
+def fallback_counts() -> dict[str, int]:
+    """Snapshot of the trace-time fallback counters."""
+    return dict(FALLBACK_EVENTS)
+
+
 def resolve_step(ptr: jax.Array) -> jax.Array:
+    """One ptr[ptr] pass via the Pallas kernel when it fits VMEM.
+
+    Above ``MAX_VMEM_ENTRIES`` there is no hierarchical chunking (yet):
+    the whole array falls back to the jnp reference, counted in
+    ``FALLBACK_EVENTS['resolve_step_oversize']`` so the detour is
+    observable (the honest baseline the future chunking PR improves on).
+    """
     mode = _mode()
-    if mode == "off" or ptr.shape[0] > MAX_VMEM_ENTRIES:
+    if ptr.shape[0] > MAX_VMEM_ENTRIES:
+        if mode != "off":
+            _record_fallback(
+                "resolve_step_oversize",
+                f"m={ptr.shape[0]} > MAX_VMEM_ENTRIES={MAX_VMEM_ENTRIES}; "
+                "resolving via the jnp reference (no hierarchical chunking)")
+        return ref.resolve_step_ref(ptr)
+    if mode == "off":
         return ref.resolve_step_ref(ptr)
     return resolve_step_pallas(ptr)

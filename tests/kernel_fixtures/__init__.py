@@ -1,0 +1,9 @@
+"""Deliberately broken Pallas kernels for the pallascheck test corpus.
+
+Each module exports ``ENTRY`` (a repro.kernels.KernelEntry whose single
+case isolates exactly one defect class) and ``EXPECT`` (the exact
+``{(kind, operand)}`` finding-identity set pallascheck must report —
+false positives fail the corpus as loudly as misses). The broken cases
+carry ``ref=None, execute=False``: they exist for the static checks, and
+must never be lowered or run.
+"""

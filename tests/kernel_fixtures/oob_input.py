@@ -1,0 +1,36 @@
+"""KC003: an index map sends an input block past the padded operand.
+
+The input map is off by one (``i + 1``): at the last grid step it asks
+for block 4 of a 4-block operand. The output side is a clean partition,
+so only the input bound fires (and only on in[0]).
+"""
+from repro.kernels import KernelCase, KernelEntry
+
+BLOCK = 128
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _build() -> KernelCase:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def fn(x, interpret=None):
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((1, BLOCK), lambda i: (0, i + 1))],
+            out_specs=pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((1, 4 * BLOCK), jnp.int32),
+        )(x)
+
+    x = jax.ShapeDtypeStruct((1, 4 * BLOCK), jnp.int32)
+    return KernelCase(fn=fn, args=(x,), ref=None, label="oob",
+                      execute=False)
+
+
+ENTRY = KernelEntry("fx_oob_input", _build, lambda: ({},))
+EXPECT = {("KC003", "in[0]")}

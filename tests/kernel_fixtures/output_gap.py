@@ -1,0 +1,36 @@
+"""KC002: the output blocks fail to partition the padded output.
+
+Grid (4,) maps to output blocks 0,0,1,1 of a 4-block output — blocks 2
+and 3 are never written. The revisits are consecutive (legal VMEM
+accumulation, no KC001) and in bounds (no KC003); only the gap fires.
+"""
+from repro.kernels import KernelCase, KernelEntry
+
+BLOCK = 128
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _build() -> KernelCase:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def fn(x, interpret=None):
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((1, BLOCK), lambda i: (0, i))],
+            out_specs=pl.BlockSpec((1, BLOCK), lambda i: (0, i // 2)),
+            out_shape=jax.ShapeDtypeStruct((1, 4 * BLOCK), jnp.int32),
+        )(x)
+
+    x = jax.ShapeDtypeStruct((1, 4 * BLOCK), jnp.int32)
+    return KernelCase(fn=fn, args=(x,), ref=None, label="gap",
+                      execute=False)
+
+
+ENTRY = KernelEntry("fx_output_gap", _build, lambda: ({},))
+EXPECT = {("KC002", "out[0]")}

@@ -1,0 +1,38 @@
+"""KC001: an output block revisited from non-consecutive grid steps.
+
+Grid (4,) writes output blocks 0,1,0,1 — block 0 is closed after step 0
+and revisited at step 2. On TPU the block is flushed when the index
+changes, so the revisit re-fetches undefined data: two separated writes
+race on the same block. Distinct blocks still cover the output (no KC002)
+and every index is in bounds (no KC003).
+"""
+from repro.kernels import KernelCase, KernelEntry
+
+BLOCK = 128
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _build() -> KernelCase:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def fn(x, interpret=None):
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((1, BLOCK), lambda i: (0, i))],
+            out_specs=pl.BlockSpec((1, BLOCK), lambda i: (0, i % 2)),
+            out_shape=jax.ShapeDtypeStruct((1, 2 * BLOCK), jnp.int32),
+        )(x)
+
+    x = jax.ShapeDtypeStruct((1, 4 * BLOCK), jnp.int32)
+    return KernelCase(fn=fn, args=(x,), ref=None, label="race",
+                      execute=False)
+
+
+ENTRY = KernelEntry("fx_overlapping_writes", _build, lambda: ({},))
+EXPECT = {("KC001", "out[0]")}

@@ -1,0 +1,38 @@
+"""KC004: the per-grid-step working set blows the VMEM budget.
+
+A (1, 4M) int32 source held resident is 16 MiB — alone past the 8 MiB
+budget (16 MiB x 0.5 safety) before the double-buffered output blocks
+are counted. Index maps and the output partition are all clean, so only
+the call-level budget finding fires.
+"""
+from repro.kernels import KernelCase, KernelEntry
+
+BLOCK = 128
+RESIDENT = 4 * 2**20  # int32 entries -> 16 MiB resident
+
+
+def _gather_kernel(src_ref, o_ref):
+    o_ref[...] = src_ref[0, :BLOCK][None, :]
+
+
+def _build() -> KernelCase:
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    def fn(src, interpret=None):
+        return pl.pallas_call(
+            _gather_kernel,
+            grid=(4,),
+            in_specs=[pl.BlockSpec((1, RESIDENT), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((1, BLOCK), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((1, 4 * BLOCK), jnp.int32),
+        )(src)
+
+    src = jax.ShapeDtypeStruct((1, RESIDENT), jnp.int32)
+    return KernelCase(fn=fn, args=(src,), ref=None, label="buster",
+                      execute=False)
+
+
+ENTRY = KernelEntry("fx_vmem_buster", _build, lambda: ({},))
+EXPECT = {("KC004", "")}

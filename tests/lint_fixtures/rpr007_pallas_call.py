@@ -1,0 +1,46 @@
+# lint-as: src/repro/core/fixture.py
+# RPR007: pl.pallas_call lives in src/repro/kernels/ only — that is the
+# seam the pallascheck registry certifies; a call elsewhere is invisible
+# to the static verifier and the kernel-inventory drift gate.
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental import pallas as plx
+from jax.experimental.pallas import pallas_call  # expect: RPR007
+from jax.experimental.pallas import pallas_call as launch  # expect: RPR007
+
+from repro.kernels import ops
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] + 1
+
+
+def bad_direct(x):
+    return pl.pallas_call(  # expect: RPR007
+        _kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def bad_bare(x):
+    return pallas_call(  # expect: RPR007
+        _kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def bad_aliased(x):
+    return launch(  # expect: RPR007
+        _kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def bad_module_alias(x):
+    return plx.pallas_call(  # expect: RPR007
+        _kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def suppressed(x):
+    return pl.pallas_call(  # spmdlint: disable=RPR007
+        _kernel, out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype))(x)
+
+
+def good(values):
+    # registered kernels are reached through the dispatch wrappers
+    return ops.histogram(values, 64), jnp.cumsum(values)

@@ -135,3 +135,24 @@ def test_violation_formats():
     assert "RPR001" in gh
     import json
     assert json.loads(format_violations([v], "json"))[0]["rule"] == "RPR001"
+
+
+def test_violation_format_sarif():
+    import json
+
+    from repro.analysis.cli import format_violations
+    v = Violation("RPR007", "src/x.py", 3, 7, "msg")
+    log = json.loads(format_violations([v], "sarif"))
+    assert log["version"] == "2.1.0"
+    run = log["runs"][0]
+    assert run["tool"]["driver"]["name"] == "spmdlint"
+    rule_ids = {r["id"] for r in run["tool"]["driver"]["rules"]}
+    assert {r.id for r in all_rules()} <= rule_ids
+    res = run["results"][0]
+    assert res["ruleId"] == "RPR007" and res["level"] == "error"
+    loc = res["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"] == "src/x.py"
+    assert loc["region"] == {"startLine": 3, "startColumn": 8}
+    # a clean run is still a valid SARIF log (empty results)
+    assert json.loads(format_violations([], "sarif"))["runs"][0][
+        "results"] == []

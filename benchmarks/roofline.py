@@ -26,9 +26,14 @@ import json
 import os
 import sys
 
-PEAK_FLOPS = 197e12      # TPU v5e bf16 per chip
-HBM_BW = 819e9           # bytes/s per chip
-ICI_BW = 50e9            # bytes/s per link
+from repro.launch.hlo_stats import TPU_V5E
+
+# Hardware peaks live in one place (repro.launch.hlo_stats.HardwareModel)
+# shared with the kernel autotuner and the round-block benchmark; these
+# aliases keep the report formulas readable.
+PEAK_FLOPS = TPU_V5E.peak_flops
+HBM_BW = TPU_V5E.hbm_bw
+ICI_BW = TPU_V5E.ici_bw
 
 
 def model_flops(rec: dict) -> float:
@@ -58,7 +63,8 @@ def roofline_row(rec: dict) -> dict:
     mf = model_flops(rec)
     hlo_global = pd["flops"] * chips(rec)
     ideal_s = mf / (chips(rec) * PEAK_FLOPS)
-    dominant_s = max(compute_s, memory_s, coll_s)
+    dominant_s = TPU_V5E.optimal_seconds(pd["flops"], pd["bytes_accessed"],
+                                         pd["collective_bytes"])
     bottleneck = ("compute" if dominant_s == compute_s else
                   "memory" if dominant_s == memory_s else "collective")
     hbm_gib = (pd["argument_bytes"] + pd["temp_bytes"]

@@ -42,6 +42,13 @@ mechanical checks:
      grid or BlockSpec change in a Pallas kernel is a reviewed diff (delete
      the baseline to re-baseline after one).
 
+  6. Round-program perf trajectory (benchmarks/round_block.py): re-measure
+     the committed BENCH_round_block.json sweep and fail if any sweep
+     point's per-round HLO bytes or flops regress past 1.25x the committed
+     value (either leg), or if the fused Pallas path ever costs more bytes
+     than the pure-jnp formulation it replaced. Skipped when the device
+     count differs from the committed record's.
+
 Exits 0 with a notice when the backend offers no cost analysis.
 
 Usage (see scripts/verify.sh):
@@ -73,6 +80,10 @@ KERNEL_BASELINE = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "results", "kernel_audit_baseline.json")
 TOLERANCE = 0.25  # fractional drift allowed before the gate trips
+BENCH_BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_round_block.json")
+BENCH_TOLERANCE = 0.25  # per-round byte/flop regression bound (1.25x)
 
 # Pod-scale reference: the paper's 1000 MPI ranks as logical processors
 # over the forced host devices (lp = 1000 / D).
@@ -241,7 +252,12 @@ def main() -> int:
         return rc
 
     # --- 5: kernel inventory drift ------------------------------------------
-    return kernel_gate()
+    rc = kernel_gate()
+    if rc:
+        return rc
+
+    # --- 6: round-program perf trajectory -----------------------------------
+    return bench_gate()
 
 
 def audit_gate(n_dev: int, topos: list) -> int:
@@ -363,6 +379,69 @@ def kernel_gate() -> int:
               f"{KERNEL_BASELINE} to re-baseline", file=sys.stderr)
         return 1
     print(f"collective gate OK: kernel inventory matches {KERNEL_BASELINE}")
+    return 0
+
+
+def bench_gate() -> int:
+    """Per-round byte/flop regression against BENCH_round_block.json.
+
+    Re-measures the committed sweep with the benchmark's own harness (both
+    legs per point) and trips when a measurement exceeds the committed
+    value by more than BENCH_TOLERANCE, or when the fused Pallas path's
+    per-round bytes exceed the jnp path's — the inequality the kernel
+    promotion exists to hold."""
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import round_block
+
+    if not os.path.exists(BENCH_BASELINE):
+        record = round_block.run_sweep()
+        with open(BENCH_BASELINE, "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print(f"collective gate: wrote new bench baseline {BENCH_BASELINE} "
+              f"({[e['name'] for e in record['sweep']]})")
+        return 0
+
+    with open(BENCH_BASELINE) as f:
+        base = json.load(f)
+    n_dev = len(jax.devices())
+    if base.get("devices") != n_dev:
+        print(f"collective gate: bench baseline was recorded on "
+              f"{base.get('devices')} devices, running on {n_dev} — "
+              "skipping the perf-trajectory leg")
+        return 0
+
+    committed = {e["name"]: e for e in base.get("sweep", [])}
+    failed = False
+    for name, ref in committed.items():
+        rec = round_block.measure(
+            {k: ref[k] for k in ("procs", "rounds", "pair_capacity")})
+        for leg in ("jnp", "fused"):
+            for metric in ("bytes_accessed", "flops"):
+                got, want = rec[leg][metric], ref[leg][metric]
+                limit = want * (1 + BENCH_TOLERANCE)
+                if got > limit:
+                    print(f"collective gate FAILED: round_block {name} "
+                          f"{leg}.{metric} {got:.0f} exceeds committed "
+                          f"{want:.0f} (+{BENCH_TOLERANCE:.0%} limit "
+                          f"{limit:.0f}) — if the per-round cost increase "
+                          f"is intentional, re-run benchmarks/round_block "
+                          f"and commit the new {BENCH_BASELINE}",
+                          file=sys.stderr)
+                    failed = True
+        if rec["fused"]["bytes_accessed"] > rec["jnp"]["bytes_accessed"]:
+            print(f"collective gate FAILED: round_block {name} fused path "
+                  f"costs {rec['fused']['bytes_accessed']:.0f} B/round, "
+                  f"more than the jnp path's "
+                  f"{rec['jnp']['bytes_accessed']:.0f} B — the Pallas hot "
+                  "path stopped paying for itself", file=sys.stderr)
+            failed = True
+    if failed:
+        return 1
+    print(f"collective gate OK: round-block perf within "
+          f"+{BENCH_TOLERANCE:.0%} of {BENCH_BASELINE} "
+          f"({sorted(committed)})")
     return 0
 
 

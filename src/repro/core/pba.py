@@ -256,12 +256,13 @@ def _grant_round(pool, recv_counts, r, round_cap: int, e_local: int,
     unique slot. Slots past the urn budget ``t_cap`` emit -1 (counted as
     drops by the requester).
     """
+    from repro.kernels import ops as kops
     offsets = jnp.cumsum(recv_counts) - recv_counts  # exclusive prefix
     window = streaming.round_window(recv_counts, r, round_cap)
     c_idx = jnp.arange(round_cap, dtype=jnp.int32)
     flat_idx = offsets[:, None] + r * round_cap + c_idx[None, :]
     valid = (c_idx[None, :] < window[:, None]) & (flat_idx < t_cap)
-    vals = pool[e_local + jnp.clip(flat_idx, 0, t_cap - 1)]
+    vals = kops.gather(pool, e_local + jnp.clip(flat_idx, 0, t_cap - 1))
     return jnp.where(valid, vals, -1)
 
 
@@ -292,9 +293,10 @@ def pba_logical_block(ranks, procs_blk, s_blk, cfg: PBAConfig,
             lambda r, rc: _phase2(r, rc, cfg, pair_capacity),
             ranks, recv_counts)                           # (lp, P, C), (lp,)
         in_buf = blocking.transpose_payload(out_buf, topo)
-        v = jnp.take_along_axis(
+        from repro.kernels import ops as kops
+        v = kops.gather(
             in_buf.reshape(lp, num_procs * pair_capacity),
-            a * pair_capacity + jnp.minimum(occ, pair_capacity - 1), axis=1)
+            a * pair_capacity + jnp.minimum(occ, pair_capacity - 1))
         v = jnp.where(occ < pair_capacity, v, -1)
         rounds = jnp.int32(1)
     else:
@@ -341,10 +343,10 @@ def _streamed_exchange2(a, occ, counts, recv_counts, ranks, cfg: PBAConfig,
         )(pool, recv_counts)                              # (lp, P, C_r)
 
     def consume(r, recv, v):
+        from repro.kernels import ops as kops
         band = (occ >= r * c_r) & (occ < (r + 1) * c_r)
         idx = a * c_r + jnp.clip(occ - r * c_r, 0, c_r - 1)
-        vals = jnp.take_along_axis(recv.reshape(lp, num_procs * c_r), idx,
-                                   axis=1)
+        vals = kops.gather(recv.reshape(lp, num_procs * c_r), idx)
         return jnp.where(band, vals, v)
 
     v0 = jnp.full((lp, e_local), -1, jnp.int32)
@@ -391,15 +393,23 @@ def pba_stream_round_block(r, a, occ, recv_counts, pool, ranks,
     ranks [r*C_r, (r+1)*C_r) of every pair from the resident pool, route
     the (lp, P, C_r) buffer through the topology's blocked transpose
     (flat all_to_all or hierarchical two-hop — the round logic never looks
-    at the device axes), and scatter the received band into this round's
-    edges. The block is compacted on device: band edges move to the front
-    in edge order (request ranks are unique per pair, so the sort key
-    ``band ? j : E + j`` is collision-free), and only the leading
-    ``block_cap = min(E, P*C_r)`` columns — a static bound on any round's
-    band size — return to the host. Returns (u, v) of shape
-    (lp, block_cap); -1 marks padding (and, in ``v``, urn-exhausted
-    grants, which the host drops exactly like the host-path stream).
+    at the device axes), and gather the received band into this round's
+    edges. The per-round device work is the Pallas hot path: the band
+    lookup is the resident/chunked gather kernel, the block compaction is
+    the fused ``band_compact`` kernel (replacing the historical
+    argsort/take_along_axis sequence — bit-identical, the kernels compute
+    the same permutation of the same values), and the per-provider band
+    counts come from the histogram kernel. Band edges move to the front
+    in edge order (request ranks are unique per pair, so compaction is
+    collision-free), and only the leading ``block_cap = min(E, P*C_r)``
+    columns — a static bound on any round's band size — return to the
+    host. Returns (u, v, counts): u, v of shape (lp, block_cap) with -1
+    marking padding (and, in ``v``, urn-exhausted grants, which the host
+    drops exactly like the host-path stream), and counts (lp, P) — this
+    round's per-provider band sizes, the host-side consistency check on
+    the compacted block.
     """
+    from repro.kernels import ops as kops
     lp = a.shape[0]
     e_local = cfg.edges_per_proc
     out = jax.vmap(
@@ -408,18 +418,17 @@ def pba_stream_round_block(r, a, occ, recv_counts, pool, ranks,
     recv = blocking.transpose_payload(out, topo)
     band = (occ >= r * round_cap) & (occ < (r + 1) * round_cap)
     idx = a * round_cap + jnp.clip(occ - r * round_cap, 0, round_cap - 1)
-    vals = jnp.take_along_axis(
-        recv.reshape(lp, num_procs * round_cap), idx, axis=1)
+    vals = kops.gather(recv.reshape(lp, num_procs * round_cap), idx)
     v = jnp.where(band, vals, -1)
     j = jnp.arange(e_local, dtype=jnp.int32)
     u = (ranks[:, None] * jnp.int32(cfg.vertices_per_proc)
          + (j // cfg.edges_per_vertex)[None, :])
     u = jnp.where(band, u, -1)
-    key = jnp.where(band, j, e_local + j)
-    order = jnp.argsort(key, axis=1)
-    u = jnp.take_along_axis(u, order, axis=1)[:, :block_cap]
-    v = jnp.take_along_axis(v, order, axis=1)[:, :block_cap]
-    return u, v
+    counts = jax.vmap(
+        lambda row: kops.histogram(row, num_procs)
+    )(jnp.where(band, a, -1))                             # (lp, P)
+    u, v = kops.band_compact(u, v, band, block_cap)
+    return u, v, counts
 
 
 def stream_block_capacity(edges_per_proc: int, num_procs: int,
@@ -502,11 +511,13 @@ def generate_pba(cfg: PBAConfig, table: FactionTable,
     edges = EdgeList(src=u, dst=v, num_vertices=n)
     requested = num_procs * cfg.edges_per_proc
     dropped_n = int(dropped[0])
+    from repro.kernels import ops as kops
     stats = GenStats(requested_edges=requested,
                      emitted_edges=requested - dropped_n,
                      dropped_edges=dropped_n, num_vertices=n,
                      exchange_rounds=int(rounds[0]),
-                     pair_capacity=pair_capacity)
+                     pair_capacity=pair_capacity,
+                     fallback_counts=kops.fallback_counts())
     return edges, stats
 
 
@@ -555,12 +566,14 @@ def generate_pba_sharded(cfg: PBAConfig, table: FactionTable,
     n = num_procs * cfg.vertices_per_proc
     requested = num_procs * cfg.edges_per_proc
     dropped_n = int(dropped[0])
+    from repro.kernels import ops as kops
     return (EdgeList(src=u, dst=v, num_vertices=n),
             GenStats(requested_edges=requested,
                      emitted_edges=requested - dropped_n,
                      dropped_edges=dropped_n, num_vertices=n,
                      exchange_rounds=int(rounds[0]),
-                     pair_capacity=pair_capacity))
+                     pair_capacity=pair_capacity,
+                     fallback_counts=kops.fallback_counts()))
 
 
 def generate_pba_host(cfg: PBAConfig, table: FactionTable,
@@ -601,12 +614,14 @@ def generate_pba_host(cfg: PBAConfig, table: FactionTable,
     n = num_procs * cfg.vertices_per_proc
     requested = num_procs * cfg.edges_per_proc
     dropped_n = int(dropped)
+    from repro.kernels import ops as kops
     return (EdgeList(src=u, dst=v, num_vertices=n),
             GenStats(requested_edges=requested,
                      emitted_edges=requested - dropped_n,
                      dropped_edges=dropped_n, num_vertices=n,
                      exchange_rounds=int(rounds),
-                     pair_capacity=pair_capacity))
+                     pair_capacity=pair_capacity,
+                     fallback_counts=kops.fallback_counts()))
 
 
 def serial_ba_reference(num_vertices: int, k: int, seed: int = 0) -> EdgeList:

@@ -332,16 +332,16 @@ def _sharded_grant_fns(cfg: PBAConfig, num_procs: int, topo: Topology,
 
     def round_body(r, a_blk, occ_blk, recv_blk, pool_blk):
         ranks = blocking.logical_ranks(lp, topo)
-        u, v = pba_stream_round_block(
+        u, v, counts = pba_stream_round_block(
             r, a_blk[0], occ_blk[0], recv_blk[0], pool_blk[0], ranks,
             cfg, num_procs, round_cap, urn_budget, block_cap, topo)
-        return u[None], v[None]
+        return u[None], v[None], counts[None]
 
     round_fn = jax.jit(spmd.shard_map(
         round_body, mesh=mesh,
         in_specs=(PartitionSpec(),)
         + (PartitionSpec(spec, None, None),) * 4,
-        out_specs=(PartitionSpec(spec, None, None),) * 2,
+        out_specs=(PartitionSpec(spec, None, None),) * 3,
         check_vma=False))
     return pool_fn, round_fn
 
@@ -434,7 +434,7 @@ class PBAShardedStream:
 
     def dispatch_block(self, i: int):
         """Enqueue round ``i``'s device program; returns the in-flight
-        (u, v) handle without blocking on its completion."""
+        (u, v, counts) handle without blocking on its completion."""
         if not 0 <= i < self.num_blocks:
             raise ValueError(f"block {i} out of range [0, {self.num_blocks})")
         return self._round(jnp.int32(i), self._a, self._occ, self._recv,
@@ -445,10 +445,19 @@ class PBAShardedStream:
         until the device round finishes, then drops padding and
         urn-exhausted slots. Rank-major blocked layout + on-device
         edge-order compaction means the result is already in the host
-        stream's block order."""
-        u, v = handle
+        stream's block order. The round's kernel-counted per-provider band
+        sizes (the histogram output) must equal the number of compacted
+        band slots — a cheap cross-check that the fused compaction kernel
+        and the gather agreed on the band."""
+        u, v, counts = handle
         u = np.asarray(u).reshape(-1)
         v = np.asarray(v).reshape(-1)
+        band_slots = int((u >= 0).sum())
+        counted = int(np.asarray(counts).sum())
+        if band_slots != counted:
+            raise AssertionError(
+                f"round block inconsistency: compaction kept {band_slots} "
+                f"band slots but the count kernel saw {counted}")
         keep = (u >= 0) & (v >= 0)
         return u[keep], v[keep]
 
@@ -535,12 +544,14 @@ class PKStream:
 
 def stream_stats(stream, emitted: int) -> GenStats:
     """The one stats contract for a drained stream (shards or memory)."""
+    from repro.kernels import ops as kops
     return GenStats(requested_edges=stream.requested_edges,
                     emitted_edges=emitted,
                     dropped_edges=stream.requested_edges - emitted,
                     num_vertices=stream.num_vertices,
                     exchange_rounds=stream.exchange_rounds,
-                    pair_capacity=getattr(stream, "pair_capacity", 0))
+                    pair_capacity=getattr(stream, "pair_capacity", 0),
+                    fallback_counts=kops.fallback_counts())
 
 
 def stream_to_shards(stream, out_dir: str, meta: Optional[dict] = None,

@@ -52,15 +52,28 @@ class KernelEntry:
 
 # --- edge_resolve ------------------------------------------------------------
 
-def _edge_resolve_case(m: int) -> KernelCase:
+def _edge_resolve_case(m: int, chunked: bool = False,
+                       slab: int | None = None,
+                       dst_block: int | None = None) -> KernelCase:
     import numpy as np
     import jax.numpy as jnp
 
     from repro.kernels import ref
-    from repro.kernels.edge_resolve import resolve_step_pallas
+    from repro.kernels.edge_resolve import (gather_chunked_pallas,
+                                            resolve_step_pallas)
 
     rng = np.random.default_rng(1000 + m)
     ptr = jnp.asarray(rng.integers(0, m, m), jnp.int32)
+    if chunked:
+        # chunked regime: one doubling pass as the src == idx gather; tiny
+        # explicit slabs make the multi-slab path executable in interpret
+        # mode, the autotuned case stays structural.
+        return KernelCase(
+            fn=lambda p, interpret=None: gather_chunked_pallas(
+                p, p, slab=slab, dst_block=dst_block, interpret=interpret),
+            args=(ptr,), ref=ref.resolve_step_ref,
+            label=f"m{m}_chunked" + (f"_s{slab}" if slab else ""),
+            execute=m <= 8192)
     return KernelCase(
         fn=lambda p, interpret=None: resolve_step_pallas(p,
                                                          interpret=interpret),
@@ -69,20 +82,70 @@ def _edge_resolve_case(m: int) -> KernelCase:
 
 
 def _edge_resolve_sizes() -> tuple:
-    from repro.kernels.edge_resolve import MAX_VMEM_ENTRIES
-    return ({"m": 1}, {"m": 127}, {"m": 4097}, {"m": MAX_VMEM_ENTRIES})
+    from repro.kernels.edge_resolve import BLOCK, MAX_VMEM_ENTRIES
+    return ({"m": 1}, {"m": 127}, {"m": 4097}, {"m": MAX_VMEM_ENTRIES},
+            # past the resident bound: autotuned slabs (structural) plus an
+            # executable multi-slab case with forced tiny tiles
+            {"m": MAX_VMEM_ENTRIES + 1, "chunked": True},
+            {"m": 4097, "chunked": True, "slab": BLOCK, "dst_block": BLOCK})
 
 
 def _edge_resolve_meta() -> dict:
-    from repro.kernels.edge_resolve import BLOCK, MAX_VMEM_ENTRIES
+    from repro.kernels.edge_resolve import (BLOCK, MAX_CHUNKED_ENTRIES,
+                                            MAX_SLABS, MAX_VMEM_ENTRIES,
+                                            slab_entries)
     return {
         "block": BLOCK,
         "max_vmem_entries": MAX_VMEM_ENTRIES,
+        "slab_entries": slab_entries(),
+        "max_slabs": MAX_SLABS,
+        "max_chunked_entries": MAX_CHUNKED_ENTRIES,
         "oversize_fallback": (
-            "ops.resolve_step routes arrays past max_vmem_entries to the "
-            "jnp reference (no hierarchical chunking yet); trace-time "
-            "events counted in "
-            "repro.kernels.ops.FALLBACK_EVENTS['resolve_step_oversize']"),
+            "ops.resolve_step/ops.gather stay VMEM-resident up to "
+            "max_vmem_entries, then hierarchically chunk the source into "
+            "slab-sized VMEM tiles up to max_chunked_entries; only past "
+            "that do they fall back to the jnp reference, counted per "
+            "size bucket in repro.kernels.ops.FALLBACK_EVENTS "
+            "('resolve_step_oversize:le<pow2>' / 'gather_oversize:le<pow2>')"),
+    }
+
+
+# --- band_compact ------------------------------------------------------------
+
+def _band_compact_case(rows: int, e: int, cap: int) -> KernelCase:
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.kernels import ref
+    from repro.kernels.band_compact import band_compact_pallas
+
+    rng = np.random.default_rng(rows * 131 + e * 17 + cap)
+    u = jnp.asarray(rng.integers(0, 2**30, (rows, e)), jnp.int32)
+    v = jnp.asarray(rng.integers(0, 2**30, (rows, e)), jnp.int32)
+    band = jnp.asarray(rng.random((rows, e)) < 0.35)
+    return KernelCase(
+        fn=lambda u_, v_, b_, interpret=None: band_compact_pallas(
+            u_, v_, b_, cap, interpret=interpret),
+        args=(u, v, band),
+        ref=lambda u_, v_, b_: ref.band_compact_ref(u_, v_, b_, cap),
+        label=f"r{rows}_e{e}_c{cap}", execute=rows * e <= 65536)
+
+
+def _band_compact_sizes() -> tuple:
+    return ({"rows": 1, "e": 1, "cap": 1},
+            {"rows": 2, "e": 1500, "cap": 600},
+            {"rows": 4, "e": 8192, "cap": 2048},
+            {"rows": 1, "e": 262144, "cap": 65536})
+
+
+def _band_compact_meta() -> dict:
+    from repro.kernels.band_compact import IN_BLOCK, OUT_BLOCK
+    return {
+        "in_block": IN_BLOCK,
+        "out_block": OUT_BLOCK,
+        "note": ("fused predicated prefix-sum compaction replacing the "
+                 "round program's argsort/take_along_axis sequence; tile "
+                 "shapes autotuned per size (dispatch.autotune)"),
     }
 
 
@@ -161,6 +224,8 @@ def registry() -> tuple[KernelEntry, ...]:
     return (
         KernelEntry("edge_resolve", _edge_resolve_case, _edge_resolve_sizes,
                     _edge_resolve_meta),
+        KernelEntry("band_compact", _band_compact_case, _band_compact_sizes,
+                    _band_compact_meta),
         KernelEntry("histogram", _histogram_case, _histogram_sizes),
         KernelEntry("pk_expand", _pk_expand_case, _pk_expand_sizes),
     )

@@ -1,4 +1,5 @@
-"""Execution-mode probe shared by every Pallas kernel entry point.
+"""Execution-mode probe and block-shape autotuner shared by every Pallas
+kernel entry point.
 
 One place decides how a kernel runs (the ROADMAP "promote Pallas kernels"
 prep): the REPRO_PALLAS environment variable forces ``interpret`` (Pallas
@@ -9,10 +10,23 @@ Kernel functions default ``interpret=None`` and resolve it through
 :func:`default_interpret`, so a *direct* kernel call (bypassing ops.py)
 still honors the probe instead of hardcoding interpret mode; spmdlint rule
 RPR006 flags call sites that pin a literal ``interpret=``.
+
+This module also hosts the **block-shape autotuner** (:func:`autotune`):
+each kernel module enumerates its candidate BLOCK/grid tilings and the
+autotuner picks the cheapest one under the hardware cost model
+(``repro.launch.hlo_stats.TPU_V5E`` — the same roofline constants the
+benchmarks use), with the pallascheck VMEM working-set model (KC004:
+resident + 2x double-buffered gridded blocks vs
+:func:`vmem_budget_bytes`) as the *hard* feasibility constraint. The
+tuner is purely analytic — no device probing, no timing — so the chosen
+grids are a deterministic function of (backend, size) and the committed
+``results/kernel_audit_baseline.json`` is stable across CI hosts.
 """
 from __future__ import annotations
 
+import contextlib
 import os
+from typing import Callable, Iterable, Iterator
 
 import jax
 
@@ -29,16 +43,49 @@ VMEM_SAFETY = 0.5
 
 
 def vmem_budget_bytes(backend: str = "tpu") -> int:
-    """Per-kernel-call VMEM working-set budget in bytes for ``backend``."""
+    """Per-kernel-call VMEM working-set budget in bytes for ``backend``.
+
+    The REPRO_VMEM_BUDGET environment variable overrides the derived value
+    (test hook: the chunked-resolve boundary tests force a tiny budget in a
+    subprocess so the below/at/above-``MAX_VMEM_ENTRIES`` sweep executes in
+    interpret mode in seconds instead of hours — never set it in production
+    or the committed kernel baselines will drift).
+    """
+    forced = os.environ.get("REPRO_VMEM_BUDGET", "")
+    if forced:
+        return int(forced)
     return int(VMEM_BYTES.get(backend, VMEM_BYTES["tpu"]) * VMEM_SAFETY)
 
 
+_FORCED_MODE: list[str] = []  # forced_mode() stack; wins over the env probe
+
+
 def mode() -> str:
-    """'interpret' | 'off' | 'tpu' — forced by REPRO_PALLAS, else probed."""
+    """'interpret' | 'off' | 'tpu' — forced by forced_mode()/REPRO_PALLAS,
+    else probed from the backend."""
+    if _FORCED_MODE:
+        return _FORCED_MODE[-1]
     forced = os.environ.get("REPRO_PALLAS", "")
     if forced in ("interpret", "off"):
         return forced
     return "tpu" if jax.default_backend() == "tpu" else "off"
+
+
+@contextlib.contextmanager
+def forced_mode(value: str) -> Iterator[None]:
+    """Force the dispatch mode for a scope, overriding the env probe.
+
+    The jnp-vs-Pallas benchmark legs (benchmarks/round_block.py) trace the
+    same program through both dispatch paths in one process; an env-var
+    round trip would leak into other threads and child traces.
+    """
+    if value not in ("interpret", "off", "tpu"):
+        raise ValueError(f"forced_mode: unknown mode {value!r}")
+    _FORCED_MODE.append(value)
+    try:
+        yield
+    finally:
+        _FORCED_MODE.pop()
 
 
 def default_interpret(interpret=None) -> bool:
@@ -49,3 +96,51 @@ def default_interpret(interpret=None) -> bool:
     if interpret is None:
         return mode() != "tpu"
     return bool(interpret)
+
+
+# --- block-shape autotuner ---------------------------------------------------
+
+#: Modeled per-grid-step launch/pipeline overhead. The roofline terms are
+#: tiling-invariant for these kernels (total compares/bytes only depend on
+#: the padded problem), so without a step term every tiling of equal
+#: traffic would tie; 1 us/step breaks the tie toward fewer, larger blocks
+#: exactly like Mosaic's real pipeline does, while staying deterministic.
+STEP_OVERHEAD_S = 1e-6
+
+
+def autotune(kernel: str, candidates: Iterable[dict],
+             vmem: Callable[[dict], int],
+             cost: Callable[[dict], tuple[float, float, float]],
+             backend: str = "tpu") -> dict:
+    """Pick the cheapest feasible block/grid candidate for ``kernel``.
+
+    candidates: dicts of block-shape parameters (kernel-specific keys).
+    vmem(c): the candidate's KC004 working-set estimate in bytes
+      (resident + 2x gridded) — candidates over :func:`vmem_budget_bytes`
+      are infeasible, full stop.
+    cost(c): (flops, hbm_bytes, grid_steps) under the kernel's analytic
+      traffic model; scored as ``TPU_V5E.optimal_seconds(flops, bytes) +
+      steps * STEP_OVERHEAD_S``.
+
+    Deterministic: ties break on the sorted parameter items, never on
+    iteration order or machine state. Raises if no candidate fits the
+    budget — the caller's candidate grid must always include a floor
+    tiling that fits (kernel bug, not a data-dependent condition).
+    """
+    from repro.launch.hlo_stats import TPU_V5E
+
+    budget = vmem_budget_bytes(backend)
+    cands = list(candidates)
+    feasible = [c for c in cands if vmem(c) <= budget]
+    if not feasible:
+        raise ValueError(
+            f"autotune({kernel}): no candidate fits the {budget} B VMEM "
+            f"budget (tried {len(cands)}); the candidate grid must include "
+            "a floor tiling")
+
+    def score(c: dict):
+        flops, hbm_bytes, steps = cost(c)
+        return (TPU_V5E.optimal_seconds(flops, hbm_bytes)
+                + steps * STEP_OVERHEAD_S)
+
+    return min(feasible, key=lambda c: (score(c), sorted(c.items())))

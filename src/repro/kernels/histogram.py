@@ -34,6 +34,16 @@ def _hist_kernel(v_ref, out_ref, *, num_bins: int):
     out_ref[...] += hits.sum(axis=0, keepdims=True)
 
 
+def histogram_traffic_bytes(m: int, num_bins: int) -> float:
+    """Analytic HBM bytes of one call: values stream once per bin chunk
+    (the grid iterates value blocks fastest within a bin chunk), each
+    output bin block writes once. Used by the round-block benchmark's
+    kernel-traffic accounting."""
+    m_pad = -(-m // VALUE_BLOCK) * VALUE_BLOCK
+    nb_pad = -(-num_bins // BIN_BLOCK) * BIN_BLOCK
+    return 4.0 * (m_pad * (nb_pad // BIN_BLOCK) + nb_pad)
+
+
 def histogram_pallas(values: jax.Array, num_bins: int,
                      interpret: bool | None = None) -> jax.Array:
     """Count int32 values into [0, num_bins); out-of-range values ignored."""

@@ -59,3 +59,34 @@ def histogram_ref(values: jax.Array, num_bins: int) -> jax.Array:
 def resolve_step_ref(ptr: jax.Array) -> jax.Array:
     """One pointer-doubling pass: ptr'[j] = ptr[ptr[j]]."""
     return ptr[ptr]
+
+
+def gather_ref(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """out[..., k] = src[..., clip(idx[..., k], 0, m-1)] along the last axis.
+
+    The clip is the kernel contract (matches jnp's clamping read
+    semantics); all production call sites pass provably in-range indices,
+    so kernel and plain-jnp paths are bit-identical.
+    """
+    m = src.shape[-1]
+    return jnp.take_along_axis(src, jnp.clip(idx, 0, m - 1), axis=-1)
+
+
+def band_compact_ref(u: jax.Array, v: jax.Array, band: jax.Array,
+                     block_cap: int) -> tuple[jax.Array, jax.Array]:
+    """Stable band compaction (the round program's historical argsort form).
+
+    Per row: band entries move to the front in index order, everything
+    else is -1, truncated to block_cap. This is the exact
+    key/argsort/take_along_axis sequence pba_stream_round_block used, kept
+    as the oracle the fused kernel must match bit-for-bit.
+    """
+    e = u.shape[-1]
+    j = jnp.arange(e, dtype=jnp.int32)
+    key = jnp.where(band, j, e + j)
+    order = jnp.argsort(key, axis=-1)
+    uu = jnp.take_along_axis(jnp.where(band, u, -1), order,
+                             axis=-1)[..., :block_cap]
+    vv = jnp.take_along_axis(jnp.where(band, v, -1), order,
+                             axis=-1)[..., :block_cap]
+    return uu, vv

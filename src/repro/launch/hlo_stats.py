@@ -308,7 +308,7 @@ def all_to_all_span_bytes(hlo: str) -> dict:
 
 
 # --------------------------------------------------------------------------
-# Trip-aware FLOPs and HBM-traffic estimates.
+# Trip-aware FLOPs and HBM-traffic estimates, aggregated per opcode.
 #
 # XLA's cost_analysis() counts a while-loop body ONCE, so scanned layer
 # stacks under-report by the trip count. We re-derive both terms from the
@@ -320,6 +320,12 @@ def all_to_all_span_bytes(hlo: str) -> dict:
 #          (fusion-internal ops never touch HBM; parameter/gte/bitcast/tuple
 #          plumbing is skipped). This approximates HBM traffic the same way
 #          cost_analysis does, but trip-aware.
+#
+# One walker (_collect_opcode_raw) produces the per-opcode table; the scalar
+# totals in collect_hlo_costs are its column sums, and collect_opcode_stats
+# attaches a roofline-optimal-seconds column under a HardwareModel — the
+# breakdown the block-shape autotuner (kernels/dispatch.autotune) and
+# benchmarks/roofline.py consume.
 # --------------------------------------------------------------------------
 
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
@@ -339,6 +345,40 @@ class HloCosts:
     collective: "CollectiveStats"
 
 
+@dataclasses.dataclass(frozen=True)
+class HardwareModel:
+    """Roofline peaks of the modeled accelerator, in SI units.
+
+    ``optimal_seconds`` is the max of the three ratios — the time a
+    perfectly-overlapped execution could not beat. A single shared instance
+    keeps the autotuner, the roofline report, and the committed benchmark
+    baselines on the same constants.
+    """
+    name: str
+    peak_flops: float  # FLOP/s
+    hbm_bw: float      # HBM bytes/s
+    ici_bw: float      # per-link interconnect bytes/s
+
+    def optimal_seconds(self, flops: float, hbm_bytes: float,
+                        collective_bytes: float = 0.0) -> float:
+        return max(flops / self.peak_flops, hbm_bytes / self.hbm_bw,
+                   collective_bytes / self.ici_bw)
+
+
+#: TPU v5e chip: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s per ICI link.
+TPU_V5E = HardwareModel("tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                        ici_bw=50e9)
+
+
+@dataclasses.dataclass
+class OpcodeStats:
+    """Trip-aware totals for one HLO opcode (byteprofile-style row)."""
+    flops: float
+    bytes_accessed: float
+    count: float
+    optimal_seconds: float
+
+
 def _shape_dims(type_text: str) -> list[int]:
     m = _ARRAY_RE.search(type_text)
     if not m:
@@ -347,7 +387,14 @@ def _shape_dims(type_text: str) -> list[int]:
     return [int(d) for d in dims.split(",") if d] if dims else []
 
 
-def collect_hlo_costs(hlo: str) -> HloCosts:
+def _collect_opcode_raw(hlo: str) -> dict[str, tuple[float, float, float]]:
+    """opcode -> (flops, hbm_bytes, count) from the entry, trip-aware.
+
+    Column sums reproduce the historical collect_hlo_costs totals exactly:
+    flops come from dot instructions (including inside fusion-called
+    computations), bytes from top-level instructions only (fusion internals
+    never touch HBM), counts track the byte-accounted instructions.
+    """
     comps = _split_computations(hlo)
 
     entry = None
@@ -414,30 +461,7 @@ def collect_hlo_costs(hlo: str) -> HloCosts:
                     contract *= lhs_dims[int(ds)]
         return 2.0 * out * contract
 
-    flops_memo: dict[str, float] = {}
-    bytes_memo: dict[str, float] = {}
-
-    def flops_of(cname: str, stack: frozenset) -> float:
-        if cname in flops_memo:
-            return flops_memo[cname]
-        if cname in stack:
-            return 0.0
-        ci = info.get(cname)
-        if ci is None:
-            return 0.0
-        total = 0.0
-        st = stack | {cname}
-        for op, ln, name, rtype, _ in ci["insts"]:
-            if op == "dot":
-                total += dot_flops(ln, rtype, ci["shapes"])
-        for cond, body in ci["whiles"]:
-            total += trip_count(cond) * flops_of(body, st)
-        for r in set(ci["refs"]):
-            if r not in {b for _, b in ci["whiles"]} | {
-                    c for c, _ in ci["whiles"]}:
-                total += flops_of(r, st)
-        flops_memo[cname] = total
-        return total
+    memo: dict[str, dict[str, tuple[float, float, float]]] = {}
 
     def _fusion_param_traffic(fused_name: str) -> dict[int, float]:
         """Param index -> traffic bytes, for params that are only sliced
@@ -476,32 +500,42 @@ def collect_hlo_costs(hlo: str) -> HloCosts:
                 out[idx] = b
         return out
 
-    def bytes_of_comp(cname: str, stack: frozenset) -> float:
-        if cname in bytes_memo:
-            return bytes_memo[cname]
+    def stats_of(cname: str,
+                 stack: frozenset) -> dict[str, tuple[float, float, float]]:
+        if cname in memo:
+            return memo[cname]
         if cname in stack:
-            return 0.0
+            return {}
         ci = info.get(cname)
         if ci is None:
-            return 0.0
-        total = 0.0
+            return {}
+        acc: dict[str, list[float]] = {}
+
+        def add(op: str, f: float = 0.0, b: float = 0.0, c: float = 0.0,
+                mult: float = 1.0) -> None:
+            e = acc.setdefault(op, [0.0, 0.0, 0.0])
+            e[0] += f * mult
+            e[1] += b * mult
+            e[2] += c * mult
+
         st = stack | {cname}
         shapes = ci["shapes"]
         for op, ln, name, rtype, _ in ci["insts"]:
+            f = dot_flops(ln, rtype, shapes) if op == "dot" else 0.0
             if op in _NO_TRAFFIC or op == "while":
-                continue
+                continue  # plumbing carries no traffic; loop bodies merge below
             paren = ln.split("(", 1)
             opnds = (_OPND_NAME_RE.findall(paren[1].split(")")[0])
                      if len(paren) == 2 else [])
             if op == "dynamic-slice":
                 # reads only the slice region + writes the result
-                total += 2.0 * _array_bytes(rtype)
+                add(op, b=2.0 * _array_bytes(rtype), c=1.0)
                 continue
             if op == "dynamic-update-slice":
                 # in-place: read + write the update region only
                 upd = (_array_bytes(shapes.get(opnds[1], ""))
                        if len(opnds) > 1 else _array_bytes(rtype))
-                total += 2.0 * upd
+                add(op, b=2.0 * upd, c=1.0)
                 continue
             b = _array_bytes(rtype)
             slice_traffic: dict[int, float] = {}
@@ -514,19 +548,46 @@ def collect_hlo_costs(hlo: str) -> HloCosts:
                     b += slice_traffic[pos]
                 elif nm in shapes:
                     b += _array_bytes(shapes[nm])
-            total += b
+            add(op, f=f, b=b, c=1.0)
+        loop_comps = ({b for _, b in ci["whiles"]}
+                      | {c for c, _ in ci["whiles"]})
         for cond, body in ci["whiles"]:
-            total += trip_count(cond) * bytes_of_comp(body, st)
-        non_fusion_refs = (set(ci["refs"]) - ci["fusions"]
-                           - {b for _, b in ci["whiles"]}
-                           - {c for c, _ in ci["whiles"]})
-        for r in non_fusion_refs:
-            total += bytes_of_comp(r, st)
-        bytes_memo[cname] = total
-        return total
+            t = float(trip_count(cond))
+            for op2, (f, b, c) in stats_of(body, st).items():
+                add(op2, f=f, b=b, c=c, mult=t)
+        for r in set(ci["refs"]) - loop_comps:
+            sub = stats_of(r, st)
+            if r in ci["fusions"]:
+                # fusion-called computations: their dots burn flops but the
+                # intermediates never reach HBM — flops column only.
+                for op2, (f, b, c) in sub.items():
+                    add(op2, f=f)
+            else:
+                for op2, (f, b, c) in sub.items():
+                    add(op2, f=f, b=b, c=c)
+        out = {k: (v[0], v[1], v[2]) for k, v in acc.items()}
+        memo[cname] = out
+        return out
 
-    coll = collect_collective_stats(hlo)
     if entry is None:
-        return HloCosts(0.0, 0.0, coll)
-    return HloCosts(flops_of(entry, frozenset()),
-                    bytes_of_comp(entry, frozenset()), coll)
+        return {}
+    return stats_of(entry, frozenset())
+
+
+def collect_hlo_costs(hlo: str) -> HloCosts:
+    raw = _collect_opcode_raw(hlo)
+    return HloCosts(sum(v[0] for v in raw.values()),
+                    sum(v[1] for v in raw.values()),
+                    collect_collective_stats(hlo))
+
+
+def collect_opcode_stats(hlo: str,
+                         model: HardwareModel = TPU_V5E
+                         ) -> dict[str, OpcodeStats]:
+    """Per-opcode flops/bytes/count with roofline-optimal seconds.
+
+    The table behind ``python -m benchmarks.roofline``'s breakdown and the
+    autotuner's cost comparisons; keys sorted for stable reports."""
+    raw = _collect_opcode_raw(hlo)
+    return {op: OpcodeStats(f, b, c, model.optimal_seconds(f, b))
+            for op, (f, b, c) in sorted(raw.items())}

@@ -44,7 +44,8 @@ def test_registry_self_check_clean():
     findings, inv = kc.run_registry(execute=False)
     assert not findings, "\n".join(f.format() for f in findings)
     assert inv["ok"]
-    assert set(inv["kernels"]) == {"edge_resolve", "histogram", "pk_expand"}
+    assert set(inv["kernels"]) == {"edge_resolve", "band_compact",
+                                   "histogram", "pk_expand"}
 
 
 def test_registry_covers_every_kernel_module():
@@ -130,22 +131,33 @@ def test_registry_boundary_case_lands_on_budget():
 # --- fallback observability --------------------------------------------------
 
 def test_oversize_resolve_fallback_is_counted(monkeypatch):
-    import jax.numpy as jnp
+    import jax
 
     from repro.kernels import ops
-    from repro.kernels.edge_resolve import MAX_VMEM_ENTRIES
+    from repro.kernels.edge_resolve import MAX_CHUNKED_ENTRIES
 
     monkeypatch.setenv("REPRO_PALLAS", "interpret")
     monkeypatch.setattr(ops, "FALLBACK_EVENTS", {})
-    m = MAX_VMEM_ENTRIES + 1
-    ptr = jnp.zeros((m,), jnp.int32)
-    out = ops.resolve_step(ptr)
+    # past even the chunked bound -> jnp reference, counted per size
+    # bucket. The routing decision is made on static shapes at trace
+    # time, so eval_shape triggers it without allocating ~256 MiB.
+    m = MAX_CHUNKED_ENTRIES + 1
+    spec = jax.ShapeDtypeStruct((m,), jax.numpy.int32)
+    out = jax.eval_shape(ops.resolve_step, spec)
     assert out.shape == (m,)
-    assert ops.fallback_counts() == {"resolve_step_oversize": 1}
+    key = f"resolve_step_oversize:le{ops._bucket(m)}"
+    assert ops.fallback_counts() == {key: 1}
+    # the chunked regime itself is a kernel path, not a fallback
+    monkeypatch.setattr(ops, "FALLBACK_EVENTS", {})
+    from repro.kernels.edge_resolve import MAX_VMEM_ENTRIES
+    jax.eval_shape(ops.resolve_step,
+                   jax.ShapeDtypeStruct((MAX_VMEM_ENTRIES + 1,),
+                                        jax.numpy.int32))
+    assert ops.fallback_counts() == {}
     # in forced-off mode the reference IS the normal path: not an event
     monkeypatch.setenv("REPRO_PALLAS", "off")
     monkeypatch.setattr(ops, "FALLBACK_EVENTS", {})
-    ops.resolve_step(ptr)
+    jax.eval_shape(ops.resolve_step, spec)
     assert ops.fallback_counts() == {}
 
 

@@ -79,6 +79,121 @@ def test_pk_expand_noise_parity():
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
 
+@pytest.mark.parametrize("m,n", [(1, 1), (64, 200), (1000, 1000),
+                                 (4097, 130), (2048, 4097)])
+def test_gather_sweep(m, n):
+    from repro.kernels.edge_resolve import gather_pallas
+
+    rng = np.random.default_rng(m * 7 + n)
+    src = jnp.asarray(rng.integers(0, 2**30, m), jnp.int32)
+    # include out-of-range indices: the contract clips (matches jnp reads)
+    idx = jnp.asarray(rng.integers(-3, m + 3, n), jnp.int32)
+    got = gather_pallas(src, idx, interpret=True)
+    want = ref.gather_ref(src, idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m,n", [(1, 1), (1023, 777), (1024, 1024),
+                                 (1025, 100), (4097, 2050), (5000, 5000)])
+def test_chunked_gather_sweep(m, n):
+    """Multi-slab path with forced tiny tiles: below / at / above one slab
+    and at non-multiples of BLOCK. src == idx is one resolve pass."""
+    from repro.kernels.edge_resolve import BLOCK, gather_chunked_pallas
+
+    rng = np.random.default_rng(m * 13 + n)
+    src = jnp.asarray(rng.integers(0, 2**30, m), jnp.int32)
+    idx = jnp.asarray(rng.integers(-2, m + 2, n), jnp.int32)
+    got = gather_chunked_pallas(src, idx, slab=BLOCK, dst_block=BLOCK,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.gather_ref(src, idx)))
+
+
+def test_chunked_resolve_hypothesis_differential():
+    """Property-based boundary sweep vs the pointer-doubling oracle, sizes
+    straddling the (forced, tiny) slab bound and non-multiples of BLOCK."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    from repro.kernels.edge_resolve import BLOCK, gather_chunked_pallas
+
+    @hyp.settings(max_examples=12, deadline=None)
+    @hyp.given(st.integers(min_value=1, max_value=3 * BLOCK + 5),
+               st.integers(min_value=0, max_value=2**31 - 1))
+    def check(m, seed):
+        rng = np.random.default_rng(seed)
+        ptr = jnp.asarray(rng.integers(0, m, m), jnp.int32)
+        got = gather_chunked_pallas(ptr, ptr, slab=BLOCK, dst_block=BLOCK,
+                                    interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(ref.resolve_step_ref(ptr)))
+
+    check()
+
+
+@pytest.mark.parametrize("rows,e,cap", [(1, 1, 1), (2, 1500, 600),
+                                        (3, 100, 100), (1, 2049, 1025)])
+def test_band_compact_sweep(rows, e, cap):
+    from repro.kernels.band_compact import band_compact_pallas
+
+    rng = np.random.default_rng(rows * 101 + e + cap)
+    u = jnp.asarray(rng.integers(-1, 2**30, (rows, e)), jnp.int32)
+    v = jnp.asarray(rng.integers(-1, 2**30, (rows, e)), jnp.int32)
+    band = jnp.asarray(rng.random((rows, e)) < 0.4)
+    got_u, got_v = band_compact_pallas(u, v, band, cap, interpret=True)
+    want_u, want_v = ref.band_compact_ref(u, v, band, cap)
+    np.testing.assert_array_equal(np.asarray(got_u), np.asarray(want_u))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+
+
+def test_band_compact_overflow_truncates():
+    """More band entries than block_cap: the tail drops, exactly like the
+    argsort oracle's [:block_cap]."""
+    from repro.kernels.band_compact import band_compact_pallas
+
+    e, cap = 64, 7
+    u = jnp.arange(e, dtype=jnp.int32)[None]
+    v = (1000 + jnp.arange(e, dtype=jnp.int32))[None]
+    band = jnp.ones((1, e), bool)
+    got_u, got_v = band_compact_pallas(u, v, band, cap, interpret=True)
+    want_u, want_v = ref.band_compact_ref(u, v, band, cap)
+    np.testing.assert_array_equal(np.asarray(got_u), np.asarray(want_u))
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    assert got_u.shape == (1, cap)
+
+
+def test_resolve_boundary_regimes_subprocess():
+    """ops.resolve_step routing below/at/above the (shrunken) resident
+    bound: resident and chunked regimes are kernel paths matching the
+    oracle with zero fallback events; only past the chunked bound does the
+    bucketed fallback fire. REPRO_VMEM_BUDGET shrinks the caps so the
+    boundary is crossable in-process (read at import in the subprocess)."""
+    from helpers import run_with_devices
+    code = """
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.kernels import ops, ref
+        from repro.kernels.edge_resolve import (BLOCK, MAX_CHUNKED_ENTRIES,
+                                                MAX_VMEM_ENTRIES)
+        assert MAX_VMEM_ENTRIES == 12 * BLOCK, MAX_VMEM_ENTRIES
+        for m in (MAX_VMEM_ENTRIES - 1, MAX_VMEM_ENTRIES,
+                  MAX_VMEM_ENTRIES + 1, MAX_VMEM_ENTRIES + 7777):
+            ptr = jnp.asarray(
+                np.random.default_rng(m).integers(0, m, m), jnp.int32)
+            got = ops.resolve_step(ptr)
+            np.testing.assert_array_equal(
+                np.asarray(got), np.asarray(ref.resolve_step_ref(ptr)))
+        assert ops.fallback_counts() == {}, ops.fallback_counts()
+        m = MAX_CHUNKED_ENTRIES + 1
+        jax.eval_shape(ops.resolve_step,
+                       jax.ShapeDtypeStruct((m,), jnp.int32))
+        key = f"resolve_step_oversize:le{ops._bucket(m)}"
+        assert ops.fallback_counts() == {key: 1}, ops.fallback_counts()
+        print("regimes-ok")
+    """
+    out = run_with_devices(code, 1, {"REPRO_PALLAS": "interpret",
+                                     "REPRO_VMEM_BUDGET": "65536"})
+    assert out.strip() == "regimes-ok"
+
+
 def test_ops_dispatch_interpret_equals_off():
     """ops.* must agree between forced-interpret and jnp fallback modes."""
     from helpers import run_with_devices

@@ -42,7 +42,18 @@ mechanical checks:
      grid or BlockSpec change in a Pallas kernel is a reviewed diff (delete
      the baseline to re-baseline after one).
 
-  6. Round-program perf trajectory (benchmarks/round_block.py): re-measure
+  6. Flow inventory drift (repro.analysis.flowcheck): the jaxpr dataflow
+     verifier must pass over every front-door program (RNG lineage from
+     the declared determinism roots, blocked-layout axis roles on every
+     all_to_all, spec-digest soundness per GraphSpec field), and the
+     structural view of its inventory (verified transpose signatures,
+     per-program RNG-primitive multisets and collective routes, digest
+     field classes) must match the committed
+     results/flow_audit_baseline.json exactly — a new draw site or
+     collective route in a front-door program is a reviewed diff (delete
+     the baseline to re-baseline after one).
+
+  7. Round-program perf trajectory (benchmarks/round_block.py): re-measure
      the committed BENCH_round_block.json sweep and fail if any sweep
      point's per-round HLO bytes or flops regress past 1.25x the committed
      value (either leg), or if the fused Pallas path ever costs more bytes
@@ -79,6 +90,9 @@ AUDIT_BASELINE = os.path.join(
 KERNEL_BASELINE = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "results", "kernel_audit_baseline.json")
+FLOW_BASELINE = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "flow_audit_baseline.json")
 TOLERANCE = 0.25  # fractional drift allowed before the gate trips
 BENCH_BASELINE = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
@@ -256,7 +270,12 @@ def main() -> int:
     if rc:
         return rc
 
-    # --- 6: round-program perf trajectory -----------------------------------
+    # --- 6: flow inventory drift --------------------------------------------
+    rc = flow_gate()
+    if rc:
+        return rc
+
+    # --- 7: round-program perf trajectory -----------------------------------
     return bench_gate()
 
 
@@ -379,6 +398,53 @@ def kernel_gate() -> int:
               f"{KERNEL_BASELINE} to re-baseline", file=sys.stderr)
         return 1
     print(f"collective gate OK: kernel inventory matches {KERNEL_BASELINE}")
+    return 0
+
+
+def flow_gate() -> int:
+    """flowcheck over the front-door programs, then the structural view
+    of the flow inventory diffed against the committed baseline. ANY
+    structural difference fails: a program's RNG-primitive multiset, its
+    all_to_all routes, a transpose's verified signatures, or a GraphSpec
+    field's digest class only move via a reviewed re-commit of the
+    baseline."""
+    from repro.analysis import flowcheck
+
+    findings, inv = flowcheck.run_flow()
+    for f in findings:
+        print(f"collective gate FAILED: flowcheck {f.format()}",
+              file=sys.stderr)
+    if findings:
+        return 1
+    print(f"collective gate: flowcheck clean over "
+          f"{len(inv['programs'])} program(s), "
+          f"{len(inv['digest_fields'])} digest field(s)")
+
+    view = flowcheck.structural_view(inv)
+    if not os.path.exists(FLOW_BASELINE):
+        os.makedirs(os.path.dirname(FLOW_BASELINE), exist_ok=True)
+        with open(FLOW_BASELINE, "w") as f:
+            json.dump(inv, f, indent=2)
+        print(f"collective gate: wrote new flow baseline {FLOW_BASELINE} "
+              f"({sorted(inv['programs'])})")
+        return 0
+
+    with open(FLOW_BASELINE) as f:
+        base = json.load(f)
+    drift = flowcheck.diff_paths(flowcheck.structural_view(base), view)
+    if drift:
+        for path in drift[:20]:
+            print(f"collective gate FAILED: flow inventory drift at "
+                  f"{path}", file=sys.stderr)
+        if len(drift) > 20:
+            print(f"collective gate FAILED: ... and {len(drift) - 20} more "
+                  "drifted path(s)", file=sys.stderr)
+        print("collective gate FAILED: a front-door program's dataflow "
+              "structure (RNG draws, collective routes, digest classes) "
+              "changed — if intentional, delete "
+              f"{FLOW_BASELINE} to re-baseline", file=sys.stderr)
+        return 1
+    print(f"collective gate OK: flow inventory matches {FLOW_BASELINE}")
     return 0
 
 

@@ -1,0 +1,60 @@
+#!/usr/bin/env python3
+"""Merge SARIF 2.1.0 logs into one multi-run log.
+
+  python scripts/merge_sarif.py out.sarif in1.sarif [in2.sarif ...]
+
+Each analyzer (spmdlint, spmd-audit, pallascheck, flowcheck) emits its
+own single-run SARIF log; code-scanning UIs want one artifact. SARIF
+composes by concatenating the ``runs`` arrays — each run keeps its own
+tool/driver metadata, so findings stay attributed to the layer that
+produced them. Inputs that are missing or empty are skipped with a note
+(a partial CI matrix still merges what it has); an input that exists but
+is not valid SARIF is an error.
+"""
+import json
+import sys
+
+
+def merge(paths):
+    runs = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                text = f.read()
+        except OSError as exc:
+            print(f"merge_sarif: skipping {path}: {exc}", file=sys.stderr)
+            continue
+        if not text.strip():
+            print(f"merge_sarif: skipping empty {path}", file=sys.stderr)
+            continue
+        log = json.loads(text)
+        if log.get("version") != "2.1.0" or "runs" not in log:
+            raise SystemExit(
+                f"merge_sarif: {path} is not a SARIF 2.1.0 log")
+        runs.extend(log["runs"])
+    return {
+        "$schema": ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                    "master/Schemata/sarif-schema-2.1.0.json"),
+        "version": "2.1.0",
+        "runs": runs,
+    }
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    out, inputs = argv[0], argv[1:]
+    merged = merge(inputs)
+    with open(out, "w") as f:
+        json.dump(merged, f, indent=2)
+    tools = [r.get("tool", {}).get("driver", {}).get("name", "?")
+             for r in merged["runs"]]
+    results = sum(len(r.get("results", ())) for r in merged["runs"])
+    print(f"merge_sarif: {out}: {len(merged['runs'])} run(s) "
+          f"[{', '.join(tools)}], {results} result(s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -10,9 +10,11 @@
 # pl.pallas_call (grid/BlockSpec partition + race, VMEM budget) and runs
 # the interpret-vs-ref differential, the compiled-collective audit
 # re-derives the all_to_all structure of every front-door program from its
-# jaxpr/HLO, and the collective gate fails on exchange-volume regressions,
-# audit-count drift, and kernel-inventory drift against the committed
-# results/ baselines.
+# jaxpr/HLO, flowcheck proves the dataflow contracts (RNG lineage from the
+# declared determinism roots, blocked-layout axis roles on every
+# all_to_all, spec-digest soundness), and the collective gate fails on
+# exchange-volume regressions, audit-count drift, kernel-inventory drift,
+# and flow-inventory drift against the committed results/ baselines.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -162,6 +164,10 @@ REPRO_PALLAS=interpret python -m repro.analysis kernels
 echo "== compiled-collective audit =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m repro.analysis audit --out /tmp/collective_audit.json
+
+echo "== flowcheck: jaxpr dataflow verifier =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m repro.analysis flow --out /tmp/flow_audit.json
 
 echo "== collective-bytes gate =="
 XLA_FLAGS="--xla_force_host_platform_device_count=8" \

@@ -1,6 +1,6 @@
 """Static analysis for the repo's SPMD invariants.
 
-Three layers (see README "Invariants & static analysis"):
+Four layers (see README "Invariants & static analysis"):
 
   spmdlint (:mod:`repro.analysis.linter` + :mod:`repro.analysis.rules`) —
   an AST lint pass over the source invariants: raw shard_map/mesh APIs and
@@ -25,9 +25,18 @@ Three layers (see README "Invariants & static analysis"):
   and differentially sanitizes interpret mode vs the oracles on seeded
   inputs. Imports JAX lazily, on first use.
 
+  flowcheck (:mod:`repro.analysis.flowcheck`) — a jaxpr dataflow verifier
+  over the front-door SPMD programs (never executing): abstract
+  interpretation proves every RNG draw derives only from the declared
+  determinism roots (seed, rank, static budgets — FC001), types each
+  blocked-transpose axis with logical roles and verifies every all_to_all
+  permutes exactly the axis its Topology claims (FC002), and perturbs each
+  GraphSpec field to prove spec_digest tracks exactly the trace-relevant
+  identity fields (FC003). Imports JAX lazily, on first use.
+
 CLI: ``python -m repro.analysis`` (lint) / ``python -m repro.analysis
-audit`` / ``python -m repro.analysis kernels``; thin wrapper at
-scripts/lint.py.
+audit`` / ``python -m repro.analysis kernels`` / ``python -m
+repro.analysis flow``; thin wrapper at scripts/lint.py.
 """
 from repro.analysis.linter import (DEFAULT_PATHS, ImportTable, LintConfig,
                                    Violation, find_repo_root, lint_paths,

@@ -17,7 +17,17 @@
       ref-oracle parity, interpret differential) and emit the kernel
       inventory JSON the drift gate diffs. Exit 1 on any finding.
 
-The lint path imports no JAX — it stays fast enough for a pre-commit hook.
+  python -m repro.analysis flow [--out FILE] [--no-digest]
+      flowcheck: jaxpr dataflow verifier over the front-door programs —
+      RNG lineage vs the declared determinism roots (FC001), blocked-
+      layout axis-role typing of every all_to_all (FC002), and
+      spec-digest soundness per GraphSpec field (FC003). Exit 1 on any
+      finding. Run under forced host devices for multi-device structure.
+
+The audit/kernels/flow subcommands all take ``--format text|json|sarif``;
+their SARIF logs merge with spmdlint's via scripts/merge_sarif.py into
+one code-scanning artifact. The lint path imports no JAX — it stays fast
+enough for a pre-commit hook.
 """
 from __future__ import annotations
 
@@ -73,15 +83,53 @@ def _sarif(violations: Sequence[Violation]) -> dict:
 
 def _validate_out(ap: argparse.ArgumentParser, out: Optional[str]) -> None:
     """Fail --out fast (before JAX import / long traces) when the target
-    cannot be written: nonexistent or unwritable parent directory."""
+    cannot be written: nonexistent or unwritable parent directory, the
+    target being a directory, or an existing read-only target."""
     if out is None:
         return
     import os
-    parent = os.path.dirname(os.path.abspath(out))
+    path = os.path.abspath(out)
+    parent = os.path.dirname(path)
     if not os.path.isdir(parent):
         ap.error(f"--out {out}: parent directory {parent} does not exist")
     if not os.access(parent, os.W_OK):
         ap.error(f"--out {out}: parent directory {parent} is not writable")
+    if os.path.isdir(path):
+        ap.error(f"--out {out}: is a directory, not a writable file path")
+    if os.path.exists(path) and not os.access(path, os.W_OK):
+        ap.error(f"--out {out}: existing file is not writable")
+
+
+def _generic_sarif(tool_name: str, rules: dict, results) -> dict:
+    """SARIF 2.1.0 log for the JAX-backed analyzers (audit/kernels/flow).
+
+    ``rules`` maps rule id -> short title; ``results`` is an iterable of
+    (rule_id, message, uri) where uri names the analyzed artifact (a
+    program label or kernel case — these findings locate in traced
+    programs, not source lines).
+    """
+    return {
+        "$schema": ("https://raw.githubusercontent.com/oasis-tcs/sarif-spec/"
+                    "master/Schemata/sarif-schema-2.1.0.json"),
+        "version": "2.1.0",
+        "runs": [{
+            "tool": {"driver": {
+                "name": tool_name,
+                "informationUri": "https://example.invalid/repro/analysis",
+                "rules": [{"id": rid,
+                           "shortDescription": {"text": title}}
+                          for rid, title in sorted(rules.items())],
+            }},
+            "results": [{
+                "ruleId": rid,
+                "level": "error",
+                "message": {"text": msg},
+                "locations": [{"physicalLocation": {
+                    "artifactLocation": {"uri": uri},
+                }}],
+            } for rid, msg, uri in results],
+        }],
+    }
 
 
 def lint_main(argv: Optional[Sequence[str]] = None) -> int:
@@ -131,6 +179,8 @@ def audit_main(argv: Optional[Sequence[str]] = None) -> int:
                     help="write the JSON inventory here")
     ap.add_argument("--no-hlo", action="store_true",
                     help="jaxpr-level checks only (no compile)")
+    ap.add_argument("--format", choices=("text", "json", "sarif"),
+                    default="text")
     ns = ap.parse_args(argv)
     _validate_out(ap, ns.out)
 
@@ -171,17 +221,28 @@ def audit_main(argv: Optional[Sequence[str]] = None) -> int:
     if ns.out:
         with open(ns.out, "w") as f:
             json.dump(inv, f, indent=2)
-        print(f"audit: wrote {ns.out}")
+        print(f"audit: wrote {ns.out}", file=sys.stderr)
     rc = 0
     for a in audits:
         status = "OK " if a.ok else "FAIL"
         hlo = ("" if a.hlo_all_to_alls is None else
                f" all_to_alls={a.hlo_all_to_alls}"
                f"(expect {a.expected_all_to_alls})")
-        print(f"audit {status} {a.label}: jaxpr={a.jaxpr_collectives}{hlo}")
+        if ns.format == "text":
+            print(f"audit {status} {a.label}: "
+                  f"jaxpr={a.jaxpr_collectives}{hlo}")
         for p in a.problems:
             print(f"  problem: {p}", file=sys.stderr)
             rc = 1
+    if ns.format == "json":
+        print(json.dumps(inv, indent=2))
+    elif ns.format == "sarif":
+        print(json.dumps(_generic_sarif(
+            "spmd-audit",
+            {"SPMD-AUDIT": "compiled collective structure violates the "
+                           "SPMD-uniformity contract"},
+            [("SPMD-AUDIT", p, a.label)
+             for a in audits for p in a.problems]), indent=2))
     return rc
 
 
@@ -196,6 +257,8 @@ def kernels_main(argv: Optional[Sequence[str]] = None) -> int:
                     help="VMEM budget model to check against (default: tpu)")
     ap.add_argument("--static-only", action="store_true",
                     help="skip the interpret-vs-ref differential sanitizer")
+    ap.add_argument("--format", choices=("text", "json", "sarif"),
+                    default="text")
     ns = ap.parse_args(argv)
     _validate_out(ap, ns.out)
 
@@ -206,22 +269,85 @@ def kernels_main(argv: Optional[Sequence[str]] = None) -> int:
     if ns.out:
         with open(ns.out, "w") as f:
             json.dump(inv, f, indent=2)
-        print(f"pallascheck: wrote {ns.out}")
-    n_cases = sum(len(k["cases"]) for k in inv["kernels"].values())
-    n_calls = sum(len(c["calls"]) for k in inv["kernels"].values()
-                  for c in k["cases"].values())
-    print(f"pallascheck: {len(inv['kernels'])} kernel(s), {n_cases} "
-          f"case(s), {n_calls} pallas_call(s) against "
-          f"{inv['budget']['vmem_bytes']} B VMEM budget "
-          f"({inv['budget']['backend']})")
-    for event, count in sorted(inv["fallback_events"].items()):
-        print(f"pallascheck: fallback {event}: {count} trace(s)")
+        print(f"pallascheck: wrote {ns.out}", file=sys.stderr)
+    if ns.format == "json":
+        print(json.dumps(inv, indent=2))
+    elif ns.format == "sarif":
+        print(json.dumps(_generic_sarif(
+            "pallascheck", kernelcheck.KIND_TITLES,
+            [(f.kind, f.message, f"{f.kernel}/{f.case}")
+             for f in findings]), indent=2))
+    else:
+        n_cases = sum(len(k["cases"]) for k in inv["kernels"].values())
+        n_calls = sum(len(c["calls"]) for k in inv["kernels"].values()
+                      for c in k["cases"].values())
+        print(f"pallascheck: {len(inv['kernels'])} kernel(s), {n_cases} "
+              f"case(s), {n_calls} pallas_call(s) against "
+              f"{inv['budget']['vmem_bytes']} B VMEM budget "
+              f"({inv['budget']['backend']})")
+        for event, count in sorted(inv["fallback_events"].items()):
+            print(f"pallascheck: fallback {event}: {count} trace(s)")
     if findings:
         for f in findings:
             print(f"pallascheck FAIL {f.format()}", file=sys.stderr)
         print(f"pallascheck: {len(findings)} finding(s)", file=sys.stderr)
         return 1
-    print("pallascheck: clean")
+    if ns.format == "text":
+        print("pallascheck: clean")
+    return 0
+
+
+def flow_main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis flow",
+        description="flowcheck: jaxpr dataflow verifier (RNG lineage, "
+                    "blocked-layout axis roles, spec-digest soundness)")
+    ap.add_argument("--out", default=None,
+                    help="write the flow inventory JSON here")
+    ap.add_argument("--no-digest", action="store_true",
+                    help="skip the FC003 spec-digest soundness pass "
+                    "(faster; FC001/FC002 only)")
+    ap.add_argument("--format", choices=("text", "json", "sarif"),
+                    default="text")
+    ns = ap.parse_args(argv)
+    _validate_out(ap, ns.out)
+
+    from repro.analysis import flowcheck
+
+    findings, inv = flowcheck.run_flow(digest=not ns.no_digest)
+    if ns.out:
+        with open(ns.out, "w") as f:
+            json.dump(inv, f, indent=2)
+        print(f"flowcheck: wrote {ns.out}", file=sys.stderr)
+    if ns.format == "json":
+        print(json.dumps(inv, indent=2))
+    elif ns.format == "sarif":
+        print(json.dumps(_generic_sarif(
+            "flowcheck", flowcheck.KIND_TITLES,
+            [(f.kind, f.message, f"{f.program}/{f.where}")
+             for f in findings]), indent=2))
+    else:
+        for label, p in sorted(inv["programs"].items()):
+            rng = ",".join(f"{k}x{v}"
+                           for k, v in sorted(p.get("rng_prims",
+                                                    {}).items()))
+            print(f"flowcheck {'OK  ' if p.get('ok') else 'FAIL'} {label}: "
+                  f"rng=[{rng}] all_to_all={p.get('all_to_all', [])}")
+        for topo, entries in sorted(inv["transposes"].items()):
+            ok = all(e["ok"] for e in entries.values())
+            print(f"flowcheck {'OK  ' if ok else 'FAIL'} {topo}: roles "
+                  f"verified for {sorted(entries)}")
+        if inv["digest_fields"]:
+            n = len(inv["digest_fields"])
+            print(f"flowcheck: digest soundness over {n} GraphSpec "
+                  "field(s)")
+    if findings:
+        for f in findings:
+            print(f"flowcheck FAIL {f.format()}", file=sys.stderr)
+        print(f"flowcheck: {len(findings)} finding(s)", file=sys.stderr)
+        return 1
+    if ns.format == "text":
+        print("flowcheck: clean")
     return 0
 
 
@@ -231,4 +357,6 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         return audit_main(argv[1:])
     if argv and argv[0] == "kernels":
         return kernels_main(argv[1:])
+    if argv and argv[0] == "flow":
+        return flow_main(argv[1:])
     return lint_main(argv)

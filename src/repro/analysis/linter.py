@@ -285,12 +285,35 @@ def lint_repo(root: Optional[str] = None) -> list[Violation]:
 
 # --- pyproject configuration -------------------------------------------------
 
+def _strip_toml_comment(value: str) -> str:
+    """Drop a trailing ``# comment`` that is outside any quoted string.
+
+    TOML and Python literals agree on enough here: a ``#`` inside single
+    or double quotes is content, outside them it starts a comment. Without
+    this, ``paths = ["src"]  # why`` fails literal_eval and the whole key
+    silently vanished on 3.10.
+    """
+    quote = None
+    for i, ch in enumerate(value):
+        if quote is not None:
+            if ch == quote:
+                quote = None
+        elif ch in "\"'":
+            quote = ch
+        elif ch == "#":
+            return value[:i]
+    return value
+
+
 def _parse_toml_fallback(text: str) -> dict:
     """[tool.spmdlint] section only: ``key = "str" | [list, of, strs]``.
 
     Minimal on purpose — the CI floor is Python 3.10 (no tomllib), and the
     section this engine owns never needs more grammar than flat keys with
-    string/list-of-string values (which are valid Python literals too).
+    string/list-of-string values (which are valid Python literals too,
+    once trailing comments are stripped). Values the grammar does not
+    cover (inline tables, dotted keys) are skipped, not mangled — the
+    caller falls back to defaults for those keys.
     """
     out: dict = {}
     in_section = False
@@ -305,9 +328,13 @@ def _parse_toml_fallback(text: str) -> dict:
             continue
         key, _, value = line.partition("=")
         try:
-            out[key.strip()] = ast.literal_eval(value.strip())
+            parsed = ast.literal_eval(_strip_toml_comment(value).strip())
         except (ValueError, SyntaxError):
             continue
+        if isinstance(parsed, (str, bool, int)) or (
+                isinstance(parsed, list)
+                and all(isinstance(v, str) for v in parsed)):
+            out[key.strip()] = parsed
     return out
 
 
@@ -321,7 +348,7 @@ def load_config(root: str) -> LintConfig:
         import tomllib
         section = tomllib.loads(raw.decode("utf-8")).get(
             "tool", {}).get("spmdlint", {})
-    except ModuleNotFoundError:
+    except ImportError:
         section = _parse_toml_fallback(raw.decode("utf-8"))
     return LintConfig(
         paths=tuple(section.get("paths", DEFAULT_PATHS)),

@@ -32,6 +32,16 @@ MODELS = ("pba", "pk")
 EXECUTIONS = ("auto", "host", "sharded", "streamed")
 SINKS = ("memory", "shards")
 
+#: Declared determinism roots (repro.analysis.flowcheck, pass FC001):
+#: every random draw in a traced generation program must backward-slice
+#: to these alone — the config ``seed`` (a trace-time literal), the
+#: device/rank identity (``axis_index`` / ``iota``), and static budget
+#: shapes (trace-time constants). Runtime data — faction tables, counts,
+#: demand, carried state — must never reach a key derivation or a draw;
+#: that is the phase-2 pool contract (pool = f(seed, rank, budget)) the
+#: communication-free generator family depends on, stated once.
+DETERMINISM_ROOTS = ("seed", "rank", "static_budgets")
+
 
 def _canon(x):
     """Canonical JSON-able form: dataclasses by field, arrays by content
@@ -149,6 +159,34 @@ class GraphSpec:
     # same graph from a different execution mode must not be rejected.
     _NON_IDENTITY_FIELDS = ("out_dir", "execution", "sink", "num_shards",
                             "topology", "overlap")
+
+    # Dataflow classes of the non-identity fields, consumed by
+    # repro.analysis.flowcheck (pass FC003, digest soundness): routing
+    # fields may change the *compiled program* (a different topology is a
+    # different collective schedule) but never the digest; sink fields
+    # must change neither the digest nor any traced program. flowcheck
+    # requires routing + sink to partition _NON_IDENTITY_FIELDS exactly,
+    # so a new field cannot land unclassified.
+    _ROUTING_FIELDS = ("topology", "execution", "overlap")
+    _SINK_FIELDS = ("sink", "out_dir", "num_shards")
+
+    # Identity fields whose effect binds only at run time (demand-derived
+    # sizing): the digest must cover them, but no statically traced
+    # program can be required to change — plan() never runs phase 1, so
+    # the auto urn budget is not visible to a trace.
+    _RUNTIME_ONLY_FIELDS = ("auto_capacity",)
+
+    # Identity fields owned by one model: perturbing them must change the
+    # digest, but only the named model's programs — a pba program suite
+    # is exempt from tracing pk-only fields, and vice versa.
+    _MODEL_OWNED_FIELDS = {
+        "pba": ("procs", "vertices_per_proc", "edges_per_vertex",
+                "factions", "interfaction_prob", "pair_capacity",
+                "exchange_rounds", "total_capacity_factor",
+                "auto_capacity"),
+        "pk": ("levels", "seed_graph", "noise", "delete_prob",
+               "slab_edges"),
+    }
 
     def digest(self) -> str:
         """Fingerprint of every generation-relevant field (execution mode,

@@ -48,6 +48,24 @@ def compile_sharded_pba(pl):
     return fn, (procs, s)
 
 
+def compile_sharded_stream_setup(pl):
+    """(jitted_fn, example_args) for a streamed-execution plan's sharded
+    setup program (phase 1 + exchange 1) — the program
+    ``PBAShardedStream.__init__`` runs once per stream. The example args
+    carry the plan's real faction table: the setup program is the one
+    front-door program whose RNG draws and runtime inputs coexist, which
+    is exactly what the flowcheck RNG-lineage pass wants to see.
+    """
+    from repro.core.stream import _sharded_setup_fn
+
+    cfg, table, topo = pl.config, pl.table, pl.topology
+    lp, d = pl.lp, topo.num_devices
+    setup = _sharded_setup_fn(cfg, pl.num_procs, topo)
+    procs = jnp.asarray(table.procs).reshape(d, lp, table.max_s)
+    s = jnp.asarray(table.s).reshape(d, lp)
+    return setup, (procs, s)
+
+
 def compile_sharded_stream_round(pl):
     """(jitted_fn, example_args) for one round of a streamed-execution
     plan's device-sharded exchange-2 program (grant + blocked transpose +

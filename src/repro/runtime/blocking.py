@@ -44,6 +44,23 @@ import jax.numpy as jnp
 
 from repro.runtime.topology import Topology
 
+#: Axis-role contract of the blocked transposes, consumed by
+#: :mod:`repro.analysis.flowcheck` (pass FC002). Roles name the *logical*
+#: meaning of each array axis: ``lp`` the sender-local logical-proc axis,
+#: ``P`` the destination-rank axis, ``lp_dst``/``P_src`` their
+#: post-transpose duals (my local proc / merged source rank), ``...`` a
+#: trailing payload passthrough (any number of dims, roles preserved).
+#: flowcheck seeds an abstract interpreter with the ``in`` roles, pushes
+#: them through every reshape/transpose/all_to_all equation of the traced
+#: entry point, verifies each all_to_all splits exactly the
+#: ``dev_dst:<axis>`` role its mesh axis claims (hop-by-hop on pods), and
+#: requires the final output to carry the ``out`` roles.
+AXIS_ROLES = {
+    "transpose_counts": {"in": ("lp", "P"), "out": ("lp_dst", "P_src")},
+    "transpose_payload": {"in": ("lp", "P", "..."),
+                          "out": ("lp_dst", "P_src", "...")},
+}
+
 
 def split_logical(num_procs: int, num_devices: int) -> int:
     """lp = P / D, validating divisibility (static load balance)."""

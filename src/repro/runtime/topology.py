@@ -119,6 +119,21 @@ class Topology:
             return None
         return self.axis_names if self.ndim > 1 else self.axis_names[0]
 
+    def device_axis_roles(self, end: str = "dst") -> Tuple[str, ...]:
+        """Logical roles of the rank factorization's device axes.
+
+        The blocked layout decomposes a global rank as
+        ``q = (linear device index) * lp + i`` with the linear index
+        outer-major over the mesh axes — so reshaping a rank axis of size
+        P to ``(*axis_sizes, lp)`` produces one device axis per mesh axis,
+        in mesh order. This names them (``('dev_dst:pod', 'dev_dst:proc')``
+        on ``pods(r, c)``); :mod:`repro.analysis.flowcheck` (FC002) types
+        the blocked reshape with these roles and verifies every
+        ``all_to_all`` splits exactly the axis whose role carries its mesh
+        axis name.
+        """
+        return tuple(f"dev_{end}:{name}" for name in self.axis_names)
+
     def lp(self, num_procs: int) -> int:
         """Logical procs per device: P / D, validating divisibility."""
         d = self.num_devices

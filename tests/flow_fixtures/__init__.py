@@ -1,0 +1,12 @@
+"""Deliberately broken dataflow programs for the flowcheck test corpus.
+
+Each module exports ``run()`` (build the broken program and return the
+flowcheck findings for it) and ``EXPECT`` (the exact ``{(kind, where)}``
+finding-identity set flowcheck must report — false positives fail the
+corpus as loudly as misses, same discipline as tests/kernel_fixtures).
+One module per defect class: a demand-tainted RNG draw (FC001), an
+all_to_all routed over the wrong logical axis (FC002), and a spec whose
+digest misses a trace-relevant field while covering a dead one (FC003).
+The programs only ever trace (make_jaxpr / eval_shape) — nothing here
+executes, so the corpus runs on any single-device test host.
+"""

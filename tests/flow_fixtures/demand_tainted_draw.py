@@ -1,0 +1,31 @@
+"""FC001: an RNG key is folded with runtime data before drawing.
+
+The program folds the observed demand total into its key — the classic
+way a "deterministic" generator silently becomes input-dependent: the
+drawn bits still reproduce for a fixed input, but the phase-2 pool
+contract (pool = f(seed, rank, static budgets)) is broken and the
+communication-free replay of another rank's draws no longer works. Both
+the fold (tainted operand) and the downstream draw (tainted key) must be
+flagged; the clean draw from the pristine key must not be.
+"""
+
+EXPECT = {("FC001", "random_fold_in"), ("FC001", "random_bits")}
+
+LABEL = "fixture/demand_tainted_draw"
+
+
+def run():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import flowcheck
+
+    def program(demand):
+        key = jax.random.key(7)
+        clean = jax.random.uniform(jax.random.fold_in(key, 3), (4,))
+        dirty_key = jax.random.fold_in(key, jnp.sum(demand))
+        bits = jax.random.bits(dirty_key, (4,), jnp.uint32)
+        return clean, bits
+
+    closed = jax.make_jaxpr(program)(jnp.zeros((8,), jnp.int32))
+    return flowcheck.rng_lineage_findings(closed, LABEL)

@@ -1,0 +1,52 @@
+"""FC003: a spec digest that misses one live field and covers one dead one.
+
+``TinySpec.scale`` reaches the traced program (its literal is baked into
+the jaxpr) but the digest skips it — two different graphs would resume
+each other's shards. ``TinySpec.tag`` is digested but nothing traces it —
+a dead field that spuriously invalidates resumes. The honest ``n`` moves
+both and must stay silent.
+"""
+import dataclasses
+
+EXPECT = {("FC003", "scale"), ("FC003", "tag")}
+
+LABEL = "fixture/digest_gap_spec"
+
+
+@dataclasses.dataclass(frozen=True)
+class TinySpec:
+    n: int = 4
+    scale: float = 2.0      # live in the program, missing from the digest
+    tag: int = 0            # digested, never traced
+
+
+def run():
+    import jax.numpy as jnp
+
+    from repro.analysis import flowcheck
+    from repro.core.spec import spec_digest
+
+    def digest(s):
+        return spec_digest({"n": s.n, "tag": s.tag})
+
+    def suite(s):
+        def program(x):
+            return x * s.scale + jnp.arange(s.n, dtype=x.dtype)
+
+        return {"prog": flowcheck.fingerprint_program(
+            program, (jnp.zeros((s.n,), jnp.float32),))}
+
+    rules = [
+        flowcheck.FieldRule(
+            "n", "identity",
+            lambda s: dataclasses.replace(s, n=s.n + 1)),
+        flowcheck.FieldRule(
+            "scale", "identity",
+            lambda s: dataclasses.replace(s, scale=s.scale + 1.0)),
+        flowcheck.FieldRule(
+            "tag", "identity",
+            lambda s: dataclasses.replace(s, tag=s.tag + 1)),
+    ]
+    findings, _ = flowcheck.digest_soundness_findings(
+        TinySpec(), rules, digest, suite, label=LABEL)
+    return findings

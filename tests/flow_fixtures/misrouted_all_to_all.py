@@ -1,0 +1,48 @@
+"""FC002: the blocked re-block puts the device axis in the wrong place.
+
+The correct transpose re-blocks (lp, P) as (lp, d, lp) — destination
+device in the middle — and tells the all_to_all to split that axis. This
+program re-blocks as (d, lp, lp) instead and splits axis 0: every shape
+still checks out (the split axis has size d, exactly what the collective
+demands), the program compiles and runs, and the edges land on the wrong
+ranks. The role interpreter must flag the collective (the axis it splits
+does not carry the ``dev_dst:proc`` role) and the output contract (the
+blocked layout does not survive). Pinned to a 1-device mesh so the
+corpus identity is the same on any test host.
+"""
+
+EXPECT = {("FC002", "all_to_all"), ("FC002", "out")}
+
+LABEL = "fixture/misrouted_all_to_all"
+
+
+def run():
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.analysis import flowcheck
+    from repro.runtime import spmd
+    from repro.runtime.topology import Topology
+
+    topo = Topology.flat(1)          # traces on any single-device host
+    d, lp = topo.num_devices, 2
+    p = lp * d
+
+    def bad_transpose(x):
+        blocked = x.reshape(d, lp, lp)          # device axis misplaced
+        recv = jax.lax.all_to_all(blocked, "proc", split_axis=0,
+                                  concat_axis=0, tiled=False)
+        return recv.reshape(lp, p)
+
+    def body(x):
+        return bad_transpose(x[0])[None]
+
+    fn = jax.jit(spmd.shard_map(
+        body, mesh=topo.build_mesh(),
+        in_specs=(P("proc", None, None),),
+        out_specs=P("proc", None, None), check_vma=False))
+    x = jnp.zeros((d, lp, p), jnp.int32)
+    findings, _ = flowcheck.check_transpose_roles(
+        fn, (x,), topo, ("lp", "P"), ("lp_dst", "P_src"), LABEL)
+    return findings

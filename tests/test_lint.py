@@ -156,3 +156,80 @@ def test_violation_format_sarif():
     # a clean run is still a valid SARIF log (empty results)
     assert json.loads(format_violations([], "sarif"))["runs"][0][
         "results"] == []
+
+
+# --- 3.10 pyproject fallback parser ------------------------------------------
+#
+# The CI floor is Python 3.10, which has no tomllib: load_config falls
+# back to _parse_toml_fallback for the [tool.spmdlint] section. The
+# fallback must agree with tomllib on the grammar the section actually
+# uses — and degrade to defaults (never mangle) on grammar it does not.
+
+def _fallback(text):
+    from repro.analysis.linter import _parse_toml_fallback
+    return _parse_toml_fallback(text)
+
+
+def test_fallback_parses_strings_and_lists():
+    got = _fallback(
+        '[tool.spmdlint]\n'
+        'paths = ["src", "scripts"]\n'
+        "exclude = ['generated']\n"
+        'root = "."\n')
+    assert got == {"paths": ["src", "scripts"],
+                   "exclude": ["generated"], "root": "."}
+
+
+def test_fallback_strips_comments_after_values():
+    got = _fallback(
+        '[tool.spmdlint]\n'
+        '# full-line comment\n'
+        'paths = ["src"]  # trailing comment\n'
+        'disable = ["RPR001", "RPR002"] # "quoted" in comment\n'
+        'tag = "contains # hash"  # comment after hash-in-string\n')
+    assert got == {"paths": ["src"], "disable": ["RPR001", "RPR002"],
+                   "tag": "contains # hash"}
+
+
+def test_fallback_only_reads_the_spmdlint_section():
+    got = _fallback(
+        '[tool.other]\npaths = ["nope"]\n'
+        '[tool.spmdlint]\npaths = ["src"]\n'
+        '[tool.after]\npaths = ["nope"]\n')
+    assert got == {"paths": ["src"]}
+
+
+def test_fallback_skips_ungrammatical_values_gracefully():
+    """Inline tables / non-literal values are outside the deliberately
+    minimal grammar: the key is dropped (caller default applies), the
+    rest of the section still parses."""
+    got = _fallback(
+        '[tool.spmdlint]\n'
+        'fancy = { nested = "no" }\n'
+        'mixed = ["ok", 3]\n'
+        'paths = ["src"]\n')
+    assert got == {"paths": ["src"]}
+
+
+def test_load_config_uses_fallback_without_tomllib(monkeypatch, tmp_path):
+    """Poisoning tomllib exercises the 3.10 path on any interpreter; the
+    parsed config must match what tomllib would have produced."""
+    import builtins
+    import sys
+
+    (tmp_path / "pyproject.toml").write_text(
+        '[tool.spmdlint]\n'
+        'paths = ["src", "tools"]  # lint these\n'
+        'disable = ["RPR005"]\n')
+    monkeypatch.delitem(sys.modules, "tomllib", raising=False)
+    real_import = builtins.__import__
+
+    def no_tomllib(name, *args, **kwargs):
+        if name == "tomllib":
+            raise ImportError("poisoned for test")
+        return real_import(name, *args, **kwargs)
+
+    monkeypatch.setattr(builtins, "__import__", no_tomllib)
+    cfg = load_config(str(tmp_path))
+    assert cfg.paths == ("src", "tools")
+    assert cfg.disable == ("RPR005",)

@@ -1,0 +1,197 @@
+"""Head-to-head: communication-free generation vs the PBA exchange.
+
+At matched scale — the same logical rank count P and the same global edge
+count E = P * VPP * K — compiles both front-door programs on every gate
+topology and records what each one puts on the wire:
+
+  * **pba leg**: the sharded exchange (phase 1 + both blocked transposes),
+    whose all_to_all wire bytes are the cost the paper's generator pays
+    for cross-processor realism.
+  * **cfree leg**: the ba_cfree sharded expansion at the identical (P, E),
+    whose wire bytes are **exactly zero** — no all_to_all, no collective
+    of any kind — because every edge is recomputed from (seed, index)
+    instead of communicated (Sanders–Schulz, arXiv 1602.07106).
+
+Wire bytes come from ``repro.launch.hlo_stats.all_to_all_span_bytes`` over
+the optimized HLO; total bytes accessed from the cost-analysis shim. The
+resulting ``BENCH_cfree_expand.json`` is committed at the repo root;
+scripts/collective_gate.py pins the zero-wire contract structurally on
+every run, and the ``--smoke`` mode (the CI bench-smoke job) re-measures
+the first sweep point, re-asserts the contract, and validates the record
+schema against the committed baseline.
+
+Usage (the committed baseline is recorded on the 8-device host mesh):
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m benchmarks.cfree_expand [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+
+from repro import api
+from repro.api import GraphSpec
+from repro.core import FactionSpec
+from repro.launch.bench import compile_sharded_cfree, compile_sharded_pba
+from repro.launch.hlo_stats import all_to_all_span_bytes
+from repro.runtime import Topology, spmd
+
+BASELINE = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_cfree_expand.json")
+
+#: Logical rank counts; each point runs at E = procs * VPP * K edges on
+#: every gate topology. 1000 is the paper's pod-scale reference.
+SWEEP = ({"procs": 8}, {"procs": 1000})
+VPP, K = 40, 2  # vertices/proc and edges/vertex of the matched PBA run
+PAIR_CAPACITY = 8
+
+
+def _topologies(n_dev: int) -> list:
+    topos = [Topology.flat(n_dev)]
+    if n_dev >= 4 and n_dev % 2 == 0:
+        topos.append(Topology.pods(2, n_dev // 2))
+        topos.append(Topology.pods(n_dev // 2, 2))
+    return topos
+
+
+def _pba_spec(procs: int, topo: Topology) -> GraphSpec:
+    return GraphSpec(
+        model="pba", procs=procs, vertices_per_proc=VPP, edges_per_vertex=K,
+        seed=7, pair_capacity=PAIR_CAPACITY,
+        factions=FactionSpec(max(procs // 2, 1), 2, max(procs // 2, 2),
+                             seed=1),
+        topology=topo, execution="sharded")
+
+
+def _cfree_spec(procs: int, topo: Topology) -> GraphSpec:
+    # n = VPP * P vertices at degree K derives E = K * VPP * P — the exact
+    # edge count the matched PBA spec requests.
+    return GraphSpec(model="ba_cfree", cfree_vertices=VPP * procs,
+                     ba_degree=K, procs=procs, seed=7, topology=topo,
+                     execution="sharded")
+
+
+def _leg(fn, args) -> dict:
+    compiled = fn.lower(*args).compile()
+    span = all_to_all_span_bytes(compiled.as_text())
+    return {"wire_bytes": span["local_wire"] + span["cross_wire"],
+            "cross_wire_bytes": span["cross_wire"],
+            "all_to_alls": span["n_local"] + span["n_cross"],
+            "bytes_accessed": float(spmd.cost_analysis(compiled).get(
+                "bytes accessed", 0.0))}
+
+
+def measure(entry: dict) -> dict:
+    """Both legs of one sweep point on every gate topology."""
+    procs = entry["procs"]
+    n_dev = len(jax.devices())
+    out = {"name": f"p{procs}", "procs": procs, "edges": procs * VPP * K,
+           "topologies": {}}
+    for topo in _topologies(n_dev):
+        pba = _leg(*compile_sharded_pba(api.plan(_pba_spec(procs, topo))))
+        cfree = _leg(*compile_sharded_cfree(
+            api.plan(_cfree_spec(procs, topo))))
+        out["topologies"][topo.label] = {"pba": pba, "cfree": cfree}
+    return out
+
+
+def run_sweep(entries=SWEEP) -> dict:
+    n_dev = len(jax.devices())
+    records = []
+    for entry in entries:
+        if entry["procs"] % n_dev:
+            print(f"cfree_expand: P={entry['procs']} does not divide over "
+                  f"{n_dev} devices — skipped", flush=True)
+            continue
+        rec = measure(entry)
+        for label, legs in rec["topologies"].items():
+            print(f"cfree_expand {rec['name']} {label}: cfree wire "
+                  f"{legs['cfree']['wire_bytes']:.0f} B "
+                  f"({legs['cfree']['all_to_alls']} all_to_alls) vs pba "
+                  f"exchange {legs['pba']['wire_bytes']:.0f} B "
+                  f"({legs['pba']['all_to_alls']} all_to_alls) at "
+                  f"E={rec['edges']}", flush=True)
+        records.append(rec)
+    return {"schema": 1, "devices": n_dev, "vertices_per_proc": VPP,
+            "edges_per_vertex": K, "pair_capacity": PAIR_CAPACITY,
+            "sweep": records}
+
+
+def smoke() -> int:
+    """First sweep point: re-assert the zero-wire contract and validate
+    the record schema against the committed baseline."""
+    record = run_sweep(SWEEP[:1])
+    n_dev = len(jax.devices())
+    problems = []
+    for rec in record["sweep"]:
+        for label, legs in rec["topologies"].items():
+            if legs["cfree"]["wire_bytes"] or legs["cfree"]["all_to_alls"]:
+                problems.append(
+                    f"{rec['name']} {label}: cfree program put "
+                    f"{legs['cfree']['wire_bytes']:.0f} wire bytes / "
+                    f"{legs['cfree']['all_to_alls']} all_to_alls on the "
+                    "wire — the communication-free contract is zero")
+            if n_dev > 1 and legs["pba"]["wire_bytes"] <= 0:
+                problems.append(
+                    f"{rec['name']} {label}: matched pba exchange reports "
+                    "no wire bytes — nothing to contrast against")
+    if not os.path.exists(BASELINE):
+        problems.append(f"committed baseline {BASELINE} is missing")
+    else:
+        with open(BASELINE) as f:
+            base = json.load(f)
+        if set(base) != set(record):
+            problems.append(f"top-level keys {sorted(record)} != committed "
+                            f"{sorted(base)}")
+        committed = {e["name"]: e for e in base.get("sweep", [])}
+        for rec in record["sweep"]:
+            ref = committed.get(rec["name"])
+            if ref is None:
+                problems.append(f"sweep point {rec['name']} not in "
+                                f"baseline {sorted(committed)}")
+                continue
+            for label, legs in rec["topologies"].items():
+                ref_legs = ref.get("topologies", {}).get(label)
+                if ref_legs is None:
+                    problems.append(f"{rec['name']}: topology {label} not "
+                                    "in baseline")
+                    continue
+                for leg in ("pba", "cfree"):
+                    if set(legs[leg]) != set(ref_legs.get(leg, {})):
+                        problems.append(
+                            f"{rec['name']}.{label}.{leg}: keys "
+                            f"{sorted(legs[leg])} != committed "
+                            f"{sorted(ref_legs.get(leg, {}))}")
+    for p in problems:
+        print(f"cfree_expand smoke FAILED: {p}", file=sys.stderr)
+    if not problems:
+        print("cfree_expand smoke OK: zero cfree wire bytes, schema "
+              f"matches {os.path.basename(BASELINE)}")
+    return 1 if problems else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="first sweep point only; re-assert the zero-wire "
+                         "contract and validate schema, write nothing")
+    ap.add_argument("--out", default=BASELINE,
+                    help="output JSON path (default: the committed "
+                         "BENCH_cfree_expand.json)")
+    ns = ap.parse_args(argv)
+    if ns.smoke:
+        return smoke()
+    record = run_sweep()
+    with open(ns.out, "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print(f"cfree_expand: wrote {ns.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,6 +20,13 @@ mechanical checks:
      all_to_all's total wire bytes at equal (P, C). This is the whole point
      of the topology-aware exchange; if a layout change ever routes bulk
      bytes over the cross-pod hop, the gate trips.
+  2b. Communication-free head-to-head at matched (P, E): the cfree sharded
+     program (benchmarks/cfree_expand.py measures the same pair) must
+     compile to exactly zero all_to_all instructions and zero wire bytes
+     on every gate topology, while the PBA exchange at the same logical
+     rank count and edge count moves real wire bytes — the paper-family
+     contrast the cfree executors exist to provide, pinned structurally.
+
   3. Baseline drift, per topology: bytes accessed at the reference config
      must stay within TOLERANCE of scripts/collective_bytes_baseline.json
      (committed — results/ is gitignored, and a baseline that vanishes on
@@ -77,7 +84,7 @@ import jax
 from repro import api
 from repro.api import GraphSpec
 from repro.core import FactionSpec
-from repro.launch.bench import (compile_sharded_pba,
+from repro.launch.bench import (compile_sharded_cfree, compile_sharded_pba,
                                 compile_sharded_stream_round)
 from repro.launch.hlo_stats import all_to_all_span_bytes
 from repro.runtime import Topology, spmd
@@ -212,6 +219,39 @@ def main() -> int:
                       "is missing", file=sys.stderr)
                 return 1
 
+    # --- 2b: communication-free head-to-head at matched (P, E) --------------
+    # PBA at (P, vpp=40, k=2) requests E = 80 * P edges; ba_cfree with
+    # n = 40 * P vertices at degree 2 emits the identical count. Same
+    # logical ranks, same edges — the exchange moves wire bytes, the
+    # cfree program must move exactly none on any topology.
+    p_match = POD_SCALE_P if POD_SCALE_P % n_dev == 0 else n_dev
+    pba_span = all_to_all_span_bytes(
+        compile_exchange(api.plan(_spec(p_match, 40, 2, 8, flat))).as_text())
+    pba_wire = pba_span["local_wire"] + pba_span["cross_wire"]
+    if n_dev > 1 and pba_wire <= 0:
+        print("collective gate FAILED: the matched PBA exchange reports no "
+              "all_to_all wire bytes — the head-to-head has no baseline to "
+              "contrast against", file=sys.stderr)
+        return 1
+    for topo in topos:
+        cpl = api.plan(GraphSpec(
+            model="ba_cfree", cfree_vertices=40 * p_match, ba_degree=2,
+            procs=p_match, seed=7, topology=topo, execution="sharded"))
+        fn, args = compile_sharded_cfree(cpl)
+        cspan = all_to_all_span_bytes(fn.lower(*args).compile().as_text())
+        cwire = cspan["local_wire"] + cspan["cross_wire"]
+        ncoll = cspan["n_local"] + cspan["n_cross"]
+        print(f"collective gate: head-to-head P={p_match} "
+              f"E={cpl.requested_edges} {topo.label}: cfree wire bytes "
+              f"{cwire:.0f} ({ncoll} all_to_alls) vs pba exchange "
+              f"{pba_wire:.0f}")
+        if cwire != 0 or ncoll != 0:
+            print(f"collective gate FAILED: {topo.label} cfree program "
+                  f"compiled to {ncoll} all_to_alls / {cwire:.0f} wire "
+                  "bytes — the communication-free contract is zero of "
+                  "both", file=sys.stderr)
+            return 1
+
     # --- 3: per-topology baseline drift -------------------------------------
     record = {"config": {"devices": n_dev, "vertices_per_proc": 200,
                          "edges_per_vertex": 3, "pair_capacity": 256,
@@ -297,6 +337,18 @@ def audit_gate(n_dev: int, topos: list) -> int:
     stream_pl = api.plan(_spec(n_dev, 200, 3, 256, flat).replace(
         execution="streamed", exchange_rounds=4))
     audits.append(audit_lib.audit_stream_round(stream_pl))
+    # communication-free programs: the zero-all_to_all pin enters the same
+    # drift baseline — a collective appearing in a cfree program is a
+    # contract break, not just drift
+    for topo in topos:
+        for model, kw in (
+                ("ba_cfree", {"cfree_vertices": 64 * n_dev, "ba_degree": 2}),
+                ("rmat", {"cfree_vertices": 256,
+                          "cfree_edges": 128 * n_dev}),
+                ("er", {"cfree_vertices": 101, "cfree_edges": 128 * n_dev})):
+            cpl = api.plan(GraphSpec(model=model, seed=7, topology=topo,
+                                     execution="sharded", **kw))
+            audits.append(audit_lib.audit_cfree(cpl))
 
     failed = False
     for a in audits:

@@ -158,6 +158,42 @@ with tempfile.TemporaryDirectory() as d:
 print("front door OK")
 PY
 
+echo "== communication-free smoke =="
+XLA_FLAGS="--xla_force_host_platform_device_count=8" python - <<'PY'
+import tempfile
+import numpy as np
+from repro import api
+from repro.core.storage import read_shards
+from repro.runtime import Topology
+
+# Zero-exchange generators through the front door: host, sharded over the
+# forced mesh, and streamed-to-shards all emit bit-identical edges with
+# exchange_rounds == 0.
+for model, kw in (("ba_cfree", dict(cfree_vertices=400, ba_degree=3)),
+                  ("rmat", dict(cfree_vertices=256, cfree_edges=1024)),
+                  ("er", dict(cfree_vertices=300, cfree_edges=900))):
+    spec = api.GraphSpec(model=model, seed=7, **kw)
+    hs, hd = api.generate(spec.replace(execution="host")).edges.to_numpy()
+    res = api.generate(spec.replace(execution="sharded",
+                                    topology=Topology.pods(2, 4)))
+    assert res.stats.exchange_rounds == 0, res.stats
+    ss, sd = res.edges.to_numpy()
+    np.testing.assert_array_equal(ss, hs, err_msg=model)
+    np.testing.assert_array_equal(sd, hd, err_msg=model)
+    with tempfile.TemporaryDirectory() as d:
+        api.generate(spec.replace(sink="shards", out_dir=d, slab_edges=97))
+        s, dd, _ = read_shards(d)
+        assert sorted(zip(s.tolist(), dd.tolist())) \
+            == sorted(zip(hs.tolist(), hd.tolist())), model
+
+# preset dry-run: the paper-scale cfree plan validates without compiling
+pl = api.plan(api.preset("ba_cfree_1b"))
+assert pl.exchange_rounds == 0 and pl.requested_edges == 1_000_000_000
+print("communication-free smoke OK")
+PY
+XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m benchmarks.cfree_expand --smoke
+
 echo "== pallascheck: kernel registry (interpret differential) =="
 REPRO_PALLAS=interpret python -m repro.analysis kernels
 

@@ -273,9 +273,12 @@ def while_audits(jaxpr, required_axes: Iterable[str] = ()) -> list:
 def expected_all_to_alls(topo, program: str) -> int:
     """Structural pin: a blocked transpose is one all_to_all per topology
     axis (flat: 1, pods two-hop: 2); the exchange program runs two
-    transposes (counts + payload), a stream round runs one."""
+    transposes (counts + payload), a stream round runs one. The
+    communication-free generators are pinned to **zero** on every
+    topology — that absence is their contract, audited as strictly as the
+    exchange's presence."""
     hops = max(topo.ndim, 1)
-    return {"exchange": 2 * hops, "stream_round": hops}[program]
+    return {"exchange": 2 * hops, "stream_round": hops, "cfree": 0}[program]
 
 
 @dataclasses.dataclass
@@ -351,7 +354,8 @@ def audit_program(fn, args, topo, label: str, program: str,
                     f"{audit.hlo_all_to_alls} all_to_alls, expected "
                     f"{audit.expected_all_to_alls} (one per mesh axis per "
                     "blocked transpose)")
-            if topo.ndim == 2 and span["n_cross"] == 0:
+            if (audit.expected_all_to_alls > 0 and topo.ndim == 2
+                    and span["n_cross"] == 0):
                 problems.append(
                     f"{topo.label} {program}: no strided-replica-group "
                     "all_to_all — the cross-pod hop is missing")
@@ -394,6 +398,17 @@ def audit_stream_round(pl, with_hlo: bool = True,
                          "stream_round", with_hlo=with_hlo)
 
 
+def audit_cfree(pl, with_hlo: bool = True,
+                label: Optional[str] = None) -> ProgramAudit:
+    """Audit a communication-free plan's sharded expansion program —
+    expected collective count: zero, on any topology."""
+    from repro.launch.bench import compile_sharded_cfree
+    fn, args = compile_sharded_cfree(pl)
+    return audit_program(fn, args, pl.topology,
+                         label or f"{pl.topology.label}/cfree_{pl.model}",
+                         "cfree", with_hlo=with_hlo)
+
+
 def audit_plan(pl, with_hlo: bool = True) -> list:
     """Every SPMD program a resolved GenPlan will launch, audited.
 
@@ -402,6 +417,9 @@ def audit_plan(pl, with_hlo: bool = True) -> list:
     if pl.topology.is_host or pl.executor in ("pba_host", "pk_host",
                                               "pba_stream_host"):
         return []
+    from repro.core.spec import CFREE_MODELS
+    if pl.model in CFREE_MODELS:
+        return [audit_cfree(pl, with_hlo=with_hlo)]
     audits = [audit_exchange(pl, with_hlo=with_hlo)]
     if pl.executor == "pba_stream_sharded":
         audits.append(audit_stream_round(pl, with_hlo=with_hlo))

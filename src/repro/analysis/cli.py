@@ -216,6 +216,17 @@ def audit_main(argv: Optional[Sequence[str]] = None) -> int:
         if streamed.executor == "pba_stream_sharded":
             audits.append(audit_lib.audit_stream_round(
                 streamed, with_hlo=not ns.no_hlo))
+        # communication-free family: pinned to zero collectives per topo
+        for model, kw in (("ba_cfree", {"cfree_vertices": 64 * n_dev,
+                                        "ba_degree": 2}),
+                          ("rmat", {"cfree_vertices": 256,
+                                    "cfree_edges": 128 * n_dev}),
+                          ("er", {"cfree_vertices": 101,
+                                  "cfree_edges": 128 * n_dev})):
+            cspec = api.GraphSpec(model=model, seed=7, topology=topo,
+                                  execution="sharded", **kw)
+            audits.append(audit_lib.audit_cfree(
+                api.plan(cspec), with_hlo=not ns.no_hlo))
 
     inv = audit_lib.inventory(audits, extra={"devices": n_dev})
     if ns.out:

@@ -804,7 +804,7 @@ class FlowProgram:
     """One traced front-door program flowcheck verifies."""
 
     label: str
-    program: str                  # exchange | stream_setup | stream_round
+    program: str        # exchange | stream_setup | stream_round | cfree
     topology: object
     build: Callable               # () -> (fn, example_args)
     rng_expected: bool = True
@@ -875,6 +875,25 @@ def front_door_programs(n_dev: int) -> list:
             FlowProgram(f"{topo.label}/stream_round", "stream_round",
                         topo, build_round, rng_expected=False),
         ]
+
+        # Communication-free family: same front door, zero collectives —
+        # FC002 holds trivially (no all_to_all signatures to verify) and
+        # FC001 binds on the stream-words draw, whose lineage is the seed
+        # literal alone by construction.
+        for model, kw in (("ba_cfree", {"cfree_vertices": 16 * n_dev,
+                                        "ba_degree": 2}),
+                          ("rmat", {"cfree_vertices": 256,
+                                    "cfree_edges": 64 * n_dev}),
+                          ("er", {"cfree_vertices": 101,
+                                  "cfree_edges": 64 * n_dev})):
+            cspec = api.GraphSpec(model=model, seed=7, topology=topo,
+                                  execution="sharded", **kw)
+
+            def build_cfree(s=cspec):
+                return bench.compile_sharded_cfree(api.plan(s))
+
+            programs.append(FlowProgram(f"{topo.label}/cfree_{model}",
+                                        "cfree", topo, build_cfree))
     for builder in _EXTRA_BUILDERS:
         programs.extend(builder(n_dev))
     return programs

@@ -31,16 +31,19 @@ from typing import Optional, Union
 
 import numpy as np
 
+from repro.core import cfree as cfree_lib
 from repro.core import factions as factions_lib
 from repro.core import pba as pba_lib
 from repro.core import pk as pk_lib
 from repro.core import storage as storage_lib
 from repro.core import stream as stream_lib
+from repro.core.cfree import CFreeConfig
 from repro.core.factions import FactionSpec, FactionTable, validate_table
 from repro.core.graph import EdgeList, GenStats
 from repro.core.pba import PBAConfig
 from repro.core.pk import PKConfig, SeedGraph
-from repro.core.spec import EXECUTIONS, MODELS, SINKS, GraphSpec
+from repro.core.spec import (CFREE_MODELS, EXECUTIONS, MODELS, SINKS,
+                             GraphSpec)
 from repro.runtime import spmd, streaming
 from repro.runtime.topology import Topology
 
@@ -78,7 +81,7 @@ class GenPlan:
     device_bytes: int           # rough per-device working set
     host_bytes: int             # rough host-RAM working set
     disk_bytes: int             # rough on-disk size (0 for memory sink)
-    config: Union[PBAConfig, PKConfig]
+    config: Union[PBAConfig, PKConfig, CFreeConfig]
     table: Optional[FactionTable] = None
     seed_graph: Optional[SeedGraph] = None
     block_bytes: int = 0        # streamed: per-round gathered block
@@ -104,11 +107,15 @@ class GenPlan:
                 f"rounds={self.exchange_rounds}, "
                 f"C_r={self.round_capacity}, "
                 f"urn_budget={self.urn_budget}")
-        else:
+        elif self.model == "pk":
             lines.append(
                 f"  expansion: levels={self.config.levels}, "
                 f"seed {self.seed_graph.num_vertices}v/"
                 f"{self.seed_graph.num_edges}e, zero communication")
+        else:
+            lines.append(
+                f"  cfree:     edge t is a pure function of (seed, t) — "
+                f"zero exchange rounds, any partition bit-identical")
         if self.execution == "streamed":
             lines.append(
                 f"  stream:    block ~{_fmt_bytes(self.block_bytes)}/round"
@@ -380,6 +387,62 @@ def _plan_pk(spec: GraphSpec) -> GenPlan:
                    seed_graph=seed_graph, block_bytes=block_bytes)
 
 
+def _plan_cfree(spec: GraphSpec) -> GenPlan:
+    cfg = CFreeConfig(model=spec.model, vertices=spec.cfree_vertices,
+                      edges=spec.cfree_edges, ba_degree=spec.ba_degree,
+                      rmat_a=spec.rmat_a, rmat_b=spec.rmat_b,
+                      rmat_c=spec.rmat_c, seed=spec.seed)
+    CFreeConfig.validate(cfg)
+    n, e = cfree_lib.cfree_sizes(cfg)
+    p_req = spec.procs
+    execution = _resolve_execution(
+        spec, divisible=True if spec.topology is not None or p_req == 0
+        else p_req % max(spmd.device_count(), 1) == 0)
+
+    # Working set per logical rank: the index vector, the endpoint pair,
+    # and the ba chain-resolution temporaries — a handful of int32 arrays
+    # of the rank's chunk, no pools, no round buffers, no exchange.
+    block_bytes = 0
+    if execution == "sharded":
+        d = (spec.topology.num_devices if spec.topology is not None
+             else spmd.device_count())
+        p = p_req or d
+        topo, lp = _device_topology(spec, p)
+        executor = "generate_cfree"
+        chunk = -(-e // p) if e else 0
+        device_bytes = 4 * lp * chunk * 6
+    elif execution == "streamed":
+        topo = spec.topology
+        if topo is None and spmd.device_count() > 1:
+            topo = Topology.flat(spmd.device_count())
+        if topo is not None and not topo.is_host:
+            topo, _ = _device_topology(spec)
+            p, lp, executor = topo.num_devices, 1, "cfree_stream_sharded"
+        else:
+            topo, p, lp = Topology.host(), 1, 1
+            executor = "cfree_stream"
+        slab = min(spec.slab_edges, e) if e else 0
+        block_bytes = 8 * slab
+        device_bytes = 4 * -(-slab // max(topo.num_devices, 1)) * 6
+    else:
+        topo, lp = Topology.host(), max(p_req, 1)
+        p = lp
+        executor = "generate_cfree_host"
+        device_bytes = 4 * e * 6
+    host_bytes = (block_bytes if execution == "streamed"
+                  and spec.sink == "shards" else 8 * e)
+    disk_bytes = 8 * e if spec.sink == "shards" else 0
+
+    return GenPlan(spec=spec, model=spec.model, execution=execution,
+                   sink=spec.sink, executor=executor, topology=topo,
+                   num_procs=p, lp=lp, num_vertices=n,
+                   requested_edges=e, pair_capacity=0, exchange_rounds=0,
+                   round_capacity=0, urn_budget=0,
+                   device_bytes=device_bytes, host_bytes=host_bytes,
+                   disk_bytes=disk_bytes, config=cfg,
+                   block_bytes=block_bytes)
+
+
 def plan(spec: GraphSpec) -> GenPlan:
     """Compile a :class:`GraphSpec` into a validated :class:`GenPlan`.
 
@@ -395,7 +458,11 @@ def plan(spec: GraphSpec) -> GenPlan:
         raise ValueError(f"unknown sink {spec.sink!r}: one of {SINKS}")
     if spec.sink == "shards" and not spec.out_dir:
         raise ValueError("sink='shards' needs out_dir")
-    return _plan_pba(spec) if spec.model == "pba" else _plan_pk(spec)
+    if spec.model == "pba":
+        return _plan_pba(spec)
+    if spec.model == "pk":
+        return _plan_pk(spec)
+    return _plan_cfree(spec)
 
 
 # --- generate -----------------------------------------------------------------
@@ -437,8 +504,13 @@ def _make_stream(pl: GenPlan):
                 auto_capacity=pl.spec.auto_capacity)
         return stream_lib.PBAStream(pl.config, pl.table,
                                     auto_capacity=pl.spec.auto_capacity)
-    return stream_lib.PKStream(pl.seed_graph, pl.config,
-                               slab_edges=pl.spec.slab_edges)
+    if pl.model == "pk":
+        return stream_lib.PKStream(pl.seed_graph, pl.config,
+                                   slab_edges=pl.spec.slab_edges)
+    return cfree_lib.CFreeStream(
+        pl.config, slab_edges=pl.spec.slab_edges,
+        topology=pl.topology if pl.executor == "cfree_stream_sharded"
+        else None)
 
 
 def generate(plan_or_spec: Union[GenPlan, GraphSpec]) -> GenResult:
@@ -471,12 +543,18 @@ def generate(plan_or_spec: Union[GenPlan, GraphSpec]) -> GenResult:
         else:
             edges, stats = pba_lib.generate_pba_sharded(
                 pl.config, pl.table, topology=pl.topology)
-    else:
+    elif pl.model == "pk":
         if pl.execution == "host":
             edges, stats = pk_lib.generate_pk_host(pl.seed_graph, pl.config)
         else:
             edges, stats = pk_lib.generate_pk(pl.seed_graph, pl.config,
                                               topology=pl.topology)
+    else:
+        if pl.execution == "host":
+            edges, stats = cfree_lib.generate_cfree_host(pl.config)
+        else:
+            edges, stats = cfree_lib.generate_cfree(
+                pl.config, topology=pl.topology, num_procs=pl.num_procs)
 
     result = GenResult(plan=pl, stats=stats, edges=edges)
     if pl.sink == "shards":
@@ -529,6 +607,19 @@ def _preset_pk_3b() -> GraphSpec:
     return GraphSpec(model="pk", levels=10, seed=3, execution="streamed")
 
 
+def _preset_rmat_smoke() -> GraphSpec:
+    """Small communication-free R-MAT (2^14 vertices, 2^16 edges)."""
+    return GraphSpec(model="rmat", cfree_vertices=1 << 14,
+                     cfree_edges=1 << 16, seed=7)
+
+
+def _preset_ba_cfree_1b() -> GraphSpec:
+    """Paper-scale communication-free BA: 250M vertices x degree 4 = 1B
+    edges, streamed slab by slab (add sink='shards', out_dir=...)."""
+    return GraphSpec(model="ba_cfree", cfree_vertices=250_000_000,
+                     ba_degree=4, seed=7, execution="streamed")
+
+
 PRESETS = {
     "paper_1b_5b": _preset_paper_1b_5b,
     "pod_1000rank": _preset_pod_1000rank,
@@ -536,6 +627,8 @@ PRESETS = {
     "hub_stress": _preset_hub_stress,
     "pk_smoke": _preset_pk_smoke,
     "pk_3b": _preset_pk_3b,
+    "rmat_smoke": _preset_rmat_smoke,
+    "ba_cfree_1b": _preset_ba_cfree_1b,
 }
 
 

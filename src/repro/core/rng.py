@@ -26,6 +26,10 @@ STREAM_PK_NOISE_DIGIT = 5
 STREAM_PK_XOR = 6
 STREAM_ANALYSIS = 7
 STREAM_DATA_WALKS = 8
+STREAM_CFREE_BA = 9
+STREAM_CFREE_RMAT = 10
+STREAM_CFREE_ER_U = 11
+STREAM_CFREE_ER_V = 12
 
 
 def device_key(seed, stream: int, rank):

@@ -28,7 +28,8 @@ from repro.core.factions import FactionSpec, FactionTable
 from repro.core.pk import SeedGraph
 from repro.runtime.topology import Topology
 
-MODELS = ("pba", "pk")
+MODELS = ("pba", "pk", "ba_cfree", "rmat", "er")
+CFREE_MODELS = ("ba_cfree", "rmat", "er")
 EXECUTIONS = ("auto", "host", "sharded", "streamed")
 SINKS = ("memory", "shards")
 
@@ -87,8 +88,10 @@ def spec_digest(*parts) -> str:
 class GraphSpec:
     """One declarative request = one graph. The front door's input.
 
-    model: ``"pba"`` (parallel Barabási–Albert) or ``"pk"`` (parallel
-      Kronecker).
+    model: ``"pba"`` (parallel Barabási–Albert), ``"pk"`` (parallel
+      Kronecker), or one of the communication-free family ``"ba_cfree"``
+      / ``"rmat"`` / ``"er"`` (zero exchange rounds — every edge is a
+      pure function of (seed, edge index); see repro.core.cfree).
 
     PBA scale / knobs (ignored for pk):
       procs: logical processor count P (the paper ran 1000 MPI ranks).
@@ -108,7 +111,20 @@ class GraphSpec:
       levels: Kronecker power L.
       seed_graph: the seed (default: ``star_clique_seed(5)``).
       noise / delete_prob: per-(edge, level) digit redraw / deletion.
-      slab_edges: streamed execution block size.
+      slab_edges: streamed execution block size (shared with the
+        communication-free models' streamed path).
+
+    Communication-free scale / knobs (ba_cfree / rmat / er only):
+      cfree_vertices: global vertex count n (rmat: a power of two).
+      cfree_edges: global edge count E for rmat/er (ba_cfree derives
+        E = n * ba_degree).
+      ba_degree: edges issued per arriving BA vertex (ba_cfree).
+      rmat_a / rmat_b / rmat_c: R-MAT quadrant probabilities (the fourth
+        quadrant takes the remainder 1 - a - b - c).
+      procs (shared with pba): logical rank count P = lp * D for sharded
+        execution; 0 derives P from the topology's device count. Never
+        part of the graph's identity for cfree models — any partition
+        emits bit-identical edges.
 
     Common:
       seed: the RNG seed — with the spec, the graph's entire identity.
@@ -144,6 +160,13 @@ class GraphSpec:
     noise: float = 0.0
     delete_prob: float = 0.0
     slab_edges: int = 1 << 20
+    # --- communication-free (ba_cfree / rmat / er) -------------------------
+    cfree_vertices: int = 0
+    cfree_edges: int = 0
+    ba_degree: int = 2
+    rmat_a: float = 0.57
+    rmat_b: float = 0.19
+    rmat_c: float = 0.19
     # --- common ------------------------------------------------------------
     seed: int = 0
     topology: Optional[Topology] = None
@@ -186,6 +209,14 @@ class GraphSpec:
                 "auto_capacity"),
         "pk": ("levels", "seed_graph", "noise", "delete_prob",
                "slab_edges"),
+        # slab_edges is multiply-owned (pk + the cfree family share the
+        # streamed block-size knob); procs stays pba-owned so the pba
+        # digest pass keeps covering it — cfree merely reuses its value
+        # for the P = lp*D layout without it touching cfree identity.
+        "ba_cfree": ("cfree_vertices", "ba_degree", "slab_edges"),
+        "rmat": ("cfree_vertices", "cfree_edges", "rmat_a", "rmat_b",
+                 "rmat_c", "slab_edges"),
+        "er": ("cfree_vertices", "cfree_edges", "slab_edges"),
     }
 
     def digest(self) -> str:

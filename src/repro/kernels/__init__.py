@@ -218,6 +218,52 @@ def _pk_expand_sizes() -> tuple:
             {"m": 2048, "n0": 6, "levels": 3, "noise": True})
 
 
+# --- cfree_expand ------------------------------------------------------------
+
+def _cfree_expand_case(m: int, model: str, n: int,
+                       degree: int = 2) -> KernelCase:
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core.cfree import CFreeConfig, cfree_words, rmat_thresholds
+    from repro.kernels import ref
+    from repro.kernels.cfree_expand import cfree_expand_pallas
+
+    e = n * degree if model == "ba_cfree" else max(m, 1)
+    cfg = CFreeConfig(model=model, vertices=n, edges=e, ba_degree=degree,
+                      seed=m * 7 + n)
+    words = cfree_words(cfg)
+    th = rmat_thresholds(cfg)
+    rng = np.random.default_rng(m * 29 + n)
+    t = jnp.asarray(rng.integers(0, e, m), jnp.int32)
+    return KernelCase(
+        fn=lambda t_, w_, interpret=None: cfree_expand_pallas(
+            t_, w_, model=model, n=n, ba_degree=degree, thresholds=th,
+            interpret=interpret),
+        args=(t, words),
+        ref=lambda t_, w_: ref.cfree_expand_ref(
+            t_, w_, model=model, n=n, ba_degree=degree, thresholds=th),
+        label=f"{model}_m{m}_n{n}", execute=m <= 8192)
+
+
+def _cfree_expand_sizes() -> tuple:
+    return ({"m": 100, "model": "ba_cfree", "n": 64, "degree": 3},
+            {"m": 3000, "model": "ba_cfree", "n": 4096},
+            {"m": 2048, "model": "rmat", "n": 1024},
+            {"m": 1500, "model": "er", "n": 777})
+
+
+def _cfree_expand_meta() -> dict:
+    from repro.core.cfree import CHAIN_BOUND
+    return {
+        "chain_bound": CHAIN_BOUND,
+        "note": ("pure elementwise uint32 mixing — no gathers, no tables, "
+                 "no exchange; the ba_cfree dependency chain is a "
+                 "chain_bound-unrolled masked loop (residual odd draw "
+                 "probability ~2^-chain_bound per edge, see core/cfree.py)"),
+    }
+
+
 def registry() -> tuple[KernelEntry, ...]:
     """Every Pallas kernel entry point the library can issue, with the
     size sweep pallascheck certifies it over."""
@@ -228,4 +274,6 @@ def registry() -> tuple[KernelEntry, ...]:
                     _band_compact_meta),
         KernelEntry("histogram", _histogram_case, _histogram_sizes),
         KernelEntry("pk_expand", _pk_expand_case, _pk_expand_sizes),
+        KernelEntry("cfree_expand", _cfree_expand_case, _cfree_expand_sizes,
+                    _cfree_expand_meta),
     )

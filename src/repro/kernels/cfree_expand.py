@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: communication-free per-edge endpoint expansion.
+
+The cfree inner loop (core/cfree.py) is pure uint32 mixing — edge ``t``'s
+endpoints are hashes of ``(stream words, t)`` with no table, no gather and
+no exchange. Tiling: edge indices reshape to (rows, 128) int32 and grid in
+row blocks of 8 — one (8, 128) VREG tile per step — with the (4,) stream
+words replicated in VMEM. The ba_cfree dependency chain is the same
+CHAIN_BOUND-unrolled masked loop as the reference (one hash per hop);
+rmat unrolls its static level count. The hash is re-implemented here from
+the shared constants so the kernel-vs-ref differential exercises two
+independent spellings of the same math.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.cfree import _GOLDEN, _M32, _MIX1, _MIX2, CHAIN_BOUND
+from repro.kernels.dispatch import default_interpret
+
+BLOCK_ROWS = 8
+LANES = 128
+
+
+def _mix(x):
+    x = (x ^ (x >> 16)) * jnp.uint32(_MIX1)
+    x = (x ^ (x >> 15)) * jnp.uint32(_MIX2)
+    return x ^ (x >> 16)
+
+
+def _hash(w0, w1, t, ctr: int):
+    x = t.astype(jnp.uint32) ^ w0
+    x = _mix(x + jnp.uint32((_GOLDEN * (ctr + 1)) & _M32))
+    return _mix(x ^ w1)
+
+
+def _cfree_kernel(t_ref, w_ref, u_ref, v_ref, *, model: str, n: int,
+                  degree: int, thresholds: tuple):
+    t = t_ref[...]  # (BLOCK_ROWS, LANES) int32 global edge indices
+    w = w_ref[...]  # (4,) uint32 stream words, replicated
+
+    if model == "ba_cfree":
+        def draw(j):
+            bound = (j.astype(jnp.uint32) << 1) + jnp.uint32(1)  # 2j + 1
+            return _hash(w[0], w[1], j, 0) % bound
+
+        r = draw(t)
+        for _ in range(CHAIN_BOUND):
+            odd = (r & jnp.uint32(1)) == jnp.uint32(1)
+            r = jnp.where(odd, draw((r >> 1).astype(jnp.int32)), r)
+        u = t // degree
+        v = (r >> 1).astype(jnp.int32) // degree
+    elif model == "rmat":
+        ta, tb, tc = thresholds
+        u = jnp.zeros_like(t)
+        v = jnp.zeros_like(t)
+        for level in range(n.bit_length() - 1):
+            x = _hash(w[0], w[1], t, level)
+            q = ((x >= jnp.uint32(ta)).astype(jnp.int32)
+                 + (x >= jnp.uint32(tb)).astype(jnp.int32)
+                 + (x >= jnp.uint32(tc)).astype(jnp.int32))
+            u = (u << 1) + (q >> 1)
+            v = (v << 1) + (q & 1)
+    else:  # er
+        u = (_hash(w[0], w[1], t, 0) % jnp.uint32(n)).astype(jnp.int32)
+        v = (_hash(w[2], w[3], t, 0) % jnp.uint32(n)).astype(jnp.int32)
+    u_ref[...] = u
+    v_ref[...] = v
+
+
+def cfree_expand_pallas(t: jax.Array, words: jax.Array, *, model: str,
+                        n: int, ba_degree: int, thresholds: tuple,
+                        interpret: bool | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Expand (m,) global edge indices; m pads to a (rows, 128) layout.
+
+    Pad slots compute model endpoints for index 0 (harmless — the chain
+    for t=0 terminates immediately) and are sliced off before return.
+    """
+    interpret = default_interpret(interpret)
+    m = t.shape[0]
+    tile = BLOCK_ROWS * LANES
+    m_pad = -(-m // tile) * tile
+    t2 = jnp.pad(t, (0, m_pad - m)).reshape(m_pad // LANES, LANES)
+    grid = (t2.shape[0] // BLOCK_ROWS,)
+
+    row_spec = pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0))
+    word_spec = pl.BlockSpec(words.shape, lambda i: (0,))
+
+    u2, v2 = pl.pallas_call(
+        functools.partial(_cfree_kernel, model=model, n=n, degree=ba_degree,
+                          thresholds=tuple(thresholds)),
+        grid=grid,
+        in_specs=[row_spec, word_spec],
+        out_specs=(row_spec, row_spec),
+        out_shape=(jax.ShapeDtypeStruct(t2.shape, jnp.int32),
+                   jax.ShapeDtypeStruct(t2.shape, jnp.int32)),
+        interpret=interpret,
+    )(t2, words)
+    return u2.reshape(-1)[:m], v2.reshape(-1)[:m]

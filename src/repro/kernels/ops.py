@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.core import rng as rng_lib
 from repro.kernels import ref
 from repro.kernels.dispatch import mode as _mode
+from repro.kernels.cfree_expand import cfree_expand_pallas
 from repro.kernels.pk_expand import pk_expand_pallas
 from repro.kernels.histogram import histogram_pallas
 from repro.kernels.band_compact import band_compact_pallas
@@ -57,6 +58,18 @@ def pk_expand(t_local, base_digits, seed_u, seed_v, n0: int, e0: int,
         u = jnp.where(keep, u, -1)
         v = jnp.where(keep, v, -1)
     return u, v
+
+
+def cfree_expand(t, words, *, model: str, n: int, ba_degree: int,
+                 thresholds) -> tuple[jax.Array, jax.Array]:
+    """Kernel-backed communication-free endpoint expansion with the same
+    contract as core.cfree.cfree_endpoints (pure in (words, t))."""
+    if _mode() == "off":
+        return ref.cfree_expand_ref(t, words, model=model, n=n,
+                                    ba_degree=ba_degree,
+                                    thresholds=thresholds)
+    return cfree_expand_pallas(t, words, model=model, n=n,
+                               ba_degree=ba_degree, thresholds=thresholds)
 
 
 def histogram(values: jax.Array, num_bins: int) -> jax.Array:

@@ -48,6 +48,20 @@ def pk_expand_ref(t_local: jax.Array, base_digits: jax.Array,
     return u, v
 
 
+def cfree_expand_ref(t: jax.Array, words: jax.Array, *, model: str, n: int,
+                     ba_degree: int, thresholds: tuple
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Communication-free endpoint expansion via the core jnp functions
+    (core/cfree.py holds the math; imported lazily to keep ref import-light)."""
+    from repro.core import cfree
+    if model == "ba_cfree":
+        return t // ba_degree, cfree.ba_dst(words, t, ba_degree)
+    if model == "rmat":
+        return cfree.rmat_endpoints(words, t, n.bit_length() - 1,
+                                    *thresholds)
+    return cfree.er_endpoints(words, t, n)
+
+
 def histogram_ref(values: jax.Array, num_bins: int) -> jax.Array:
     """Bincount of int32 values in [0, num_bins); out-of-range ignored."""
     v = values.reshape(-1)

@@ -87,3 +87,12 @@ def compile_sharded_stream_round(pl):
             z((d, lp, e), jnp.int32), z((d, lp, p), jnp.int32),
             z((d, lp, e + pl.urn_budget), jnp.int32))
     return round_fn, args
+
+
+def compile_sharded_cfree(pl):
+    """(jitted_fn, example_args) for a communication-free plan's sharded
+    expansion — the zero-collective front-door program the auditor pins
+    to exactly 0 all_to_alls (core.cfree.sharded_expand_fn)."""
+    from repro.core import cfree
+
+    return cfree.sharded_expand_fn(pl.config, pl.num_procs, pl.topology)

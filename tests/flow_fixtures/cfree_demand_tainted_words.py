@@ -1,0 +1,42 @@
+"""FC001: a communication-free stream-word draw keyed on runtime data.
+
+The cfree contract is that every edge is a pure function of (seed, edge
+index): the stream words are drawn once from the pristine device_key and
+everything downstream is counter-based hashing (no further RNG). This
+variant folds an observed per-rank demand total into the stream key
+before drawing the words — the edges still "reproduce" for a fixed
+input, but two ranks observing different demand now disagree on every
+edge, which is exactly the silent divergence the zero-exchange replay
+cannot detect. Both the tainted fold and the words draw must be flagged;
+the pristine-key draw of the real construction must not be.
+"""
+
+EXPECT = {("FC001", "random_fold_in"), ("FC001", "random_bits")}
+
+LABEL = "fixture/cfree_demand_tainted_words"
+
+
+def run():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis import flowcheck
+    from repro.core import cfree, rng
+
+    cfg = cfree.CFreeConfig(model="ba_cfree", vertices=16, ba_degree=2,
+                            seed=7)
+
+    def program(demand):
+        # clean: the real construction — words from the pristine key,
+        # per-edge endpoints by counter-based hashing only
+        words = cfree.cfree_words(cfg)
+        t = jnp.arange(8, dtype=jnp.uint32)
+        u, v = cfree.cfree_endpoints(cfg, t, words)
+        # broken: re-key the stream words on the demand the rank observed
+        key = rng.device_key(cfg.seed, rng.STREAM_CFREE_BA, 0)
+        dirty = jax.random.fold_in(key, jnp.sum(demand))
+        dirty_words = jax.random.bits(dirty, (4,), jnp.uint32)
+        return u, v, cfree.cfree_hash(dirty_words, t, 0)
+
+    closed = jax.make_jaxpr(program)(jnp.zeros((8,), jnp.int32))
+    return flowcheck.rng_lineage_findings(closed, LABEL)

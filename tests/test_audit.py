@@ -44,6 +44,9 @@ def test_expected_all_to_alls():
                                           "stream_round") == 1
     assert audit_lib.expected_all_to_alls(Topology.pods(2, 4),
                                           "stream_round") == 2
+    # the communication-free pin is zero on every topology
+    assert audit_lib.expected_all_to_alls(Topology.flat(8), "cfree") == 0
+    assert audit_lib.expected_all_to_alls(Topology.pods(2, 4), "cfree") == 0
 
 
 def test_exchange_jaxpr_structure_single_shot():
@@ -188,6 +191,55 @@ def test_hlo_pins_flat_and_pods():
         assert streamed.executor == "pba_stream_sharded", streamed.executor
         for a in audit_lib.audit_plan(streamed):
             assert a.ok, (a.label, a.problems)
+        print("OK")
+    """, 8)
+    assert "OK" in out
+
+
+def test_cfree_zero_pin_flags_smuggled_collective():
+    """Negative for the zero-all_to_all pin: a cfree-shaped program that
+    smuggles one raw all_to_all fails the audit with the exact count
+    mismatch, while the real cfree plan on the same mesh audits clean.
+    Multi-device subprocess because XLA elides collectives at 1 device."""
+    out = run_with_devices("""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        from repro import api
+        from repro.analysis import audit as audit_lib
+        from repro.api import GraphSpec
+        from repro.runtime import Topology, spmd
+
+        topo = Topology.flat(8)
+
+        # the real front door is clean at expected 0
+        pl = api.plan(GraphSpec(model="ba_cfree", cfree_vertices=64 * 8,
+                                ba_degree=2, seed=7, topology=topo,
+                                execution="sharded"))
+        (clean,) = audit_lib.audit_plan(pl)
+        assert clean.ok, clean.problems
+        assert clean.hlo_all_to_alls == 0
+        assert clean.expected_all_to_alls == 0
+
+        # the same shape with one smuggled collective must fail
+        def rogue(t):
+            u = (t[0] // 2).astype(jnp.int32)
+            blocked = u.reshape(topo.num_devices, -1)
+            leaked = jax.lax.all_to_all(blocked, "proc", split_axis=0,
+                                        concat_axis=0, tiled=True)
+            return (u + leaked.reshape(-1)).reshape(1, -1)
+
+        fn = jax.jit(spmd.shard_map(
+            rogue, mesh=topo.build_mesh(), in_specs=(P("proc", None),),
+            out_specs=P("proc", None), check_vma=False))
+        args = (jnp.zeros((8, 64), jnp.uint32),)
+        a = audit_lib.audit_program(fn, args, topo, "bad/cfree_rogue",
+                                    "cfree")
+        assert not a.ok
+        assert a.hlo_all_to_alls == 1 and a.expected_all_to_alls == 0
+        assert any("compiled to 1 all_to_alls, expected 0" in p
+                   for p in a.problems), a.problems
         print("OK")
     """, 8)
     assert "OK" in out

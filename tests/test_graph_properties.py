@@ -42,6 +42,61 @@ def _gamma(edges) -> float:
     return fit_power_law(np.asarray(degree_counts(edges)), kmin=5).gamma_mle
 
 
+# --- communication-free models ------------------------------------------------
+
+def test_ba_cfree_gamma_within_band_of_serial_oracle():
+    """The vectorized CHAIN_BOUND chain at smoke scale recovers the same
+    power-law tail as the small-n serial Batagelj–Brandes oracle — an
+    independent code path, so this catches a chain that is internally
+    consistent but statistically wrong."""
+    from repro.core import cfree as cfree_lib
+    res = api.generate(GraphSpec(model="ba_cfree", cfree_vertices=20_000,
+                                 ba_degree=2, seed=11, execution="host"))
+    g = _gamma(res.edges)
+    cfg = cfree_lib.CFreeConfig(model="ba_cfree", vertices=5000,
+                                ba_degree=2, seed=11)
+    u, v = cfree_lib.serial_ba_cfree_reference(cfg)
+    deg = np.bincount(u, minlength=5000) + np.bincount(v, minlength=5000)
+    g_o = fit_power_law(deg, kmin=5).gamma_mle
+    assert abs(g - g_o) < GAMMA_BAND, (g, g_o)
+    assert 2.0 < g < 3.5, g  # BA-family exponent
+
+
+def test_er_endpoint_probability_within_binomial_ci():
+    """G(n, m) endpoints are uniform: the fraction of edges whose endpoint
+    falls in the lower half of the vertex range is Binomial(E, 1/2) — pin
+    it inside a 4-sigma CI (seeded, so deterministic)."""
+    n, m = 1000, 40_000
+    res = api.generate(GraphSpec(model="er", cfree_vertices=n, cfree_edges=m,
+                                 seed=11, execution="host"))
+    s, t = res.edges.to_numpy()
+    assert len(s) == m
+    ci = 4 * np.sqrt(0.25 / m)
+    for arr in (s, t):
+        p_hat = (arr < n // 2).mean()
+        assert abs(p_hat - 0.5) < ci, (p_hat, ci)
+    # endpoints drawn from disjoint word pairs: no u/v correlation
+    assert abs(np.corrcoef(s, t)[0, 1]) < 0.02
+
+
+def test_rmat_quadrant_counts_chi_squared():
+    """First-level R-MAT quadrant counts match (a, b, c, d) under a
+    chi-squared test — 16.27 is the df=3 critical value at alpha=0.001,
+    and the run is seeded so there is no flake budget to spend."""
+    n, m = 1 << 12, 60_000
+    spec = GraphSpec(model="rmat", cfree_vertices=n, cfree_edges=m, seed=11,
+                     execution="host")
+    res = api.generate(spec)
+    s, t = res.edges.to_numpy()
+    half = n // 2
+    quad = (s >= half).astype(int) * 2 + (t >= half).astype(int)
+    counts = np.bincount(quad, minlength=4)
+    a, b, c = spec.rmat_a, spec.rmat_b, spec.rmat_c
+    expected = np.array([a, b, c, 1.0 - a - b - c]) * m
+    chi2 = float(((counts - expected) ** 2 / expected).sum())
+    assert chi2 < 16.27, (chi2, counts.tolist(), expected.tolist())
+
+
 def test_gamma_mle_sharded_streamed_within_band_of_host_oracle():
     spec = SMOKE.replace(execution="streamed", topology=Topology.flat(1))
     res = api.generate(spec)

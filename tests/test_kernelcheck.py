@@ -45,7 +45,7 @@ def test_registry_self_check_clean():
     assert not findings, "\n".join(f.format() for f in findings)
     assert inv["ok"]
     assert set(inv["kernels"]) == {"edge_resolve", "band_compact",
-                                   "histogram", "pk_expand"}
+                                   "histogram", "pk_expand", "cfree_expand"}
 
 
 def test_registry_covers_every_kernel_module():

@@ -126,6 +126,63 @@ def test_shard_writer_manifest_totals(block_sizes, seed):
         assert sum(man["counts"].values()) == total
 
 
+# --- communication-free executor (core/cfree.py) ----------------------------
+
+@given(st.integers(0, 5000), st.integers(1, 64))
+@SETTINGS
+def test_cfree_edge_slices_partition_exactly(e, p):
+    """Per-rank edge-index slices partition [0, E) exactly for arbitrary
+    (E, P): no gaps, no overlaps, every slice bounded by the static
+    ceil(E/P) chunk — the whole zero-exchange contract rests on this
+    split being a partition."""
+    from repro.core.cfree import edge_slices
+    slices = edge_slices(e, p)
+    assert len(slices) == p
+    chunk = -(-e // p) if e else 0
+    cursor = 0
+    for lo, hi in slices:
+        assert lo == cursor and lo <= hi and hi - lo <= chunk
+        cursor = hi
+    assert cursor == e
+
+
+@given(st.integers(2, 40), st.integers(1, 4), st.integers(1, 64),
+       st.integers(0, 1000))
+@SETTINGS
+def test_cfree_stream_shard_totals(n, degree, slab, seed):
+    """CFreeStream blocks through ShardWriter: manifest totals equal the
+    model's exact emitted edge count for arbitrary (n, degree, slab)."""
+    import tempfile
+    from repro.core import cfree as cfree_lib
+    cfg = cfree_lib.CFreeConfig(model="ba_cfree", vertices=n,
+                                ba_degree=degree, seed=seed)
+    stream = cfree_lib.CFreeStream(cfg, slab_edges=slab)
+    _, e = cfree_lib.cfree_sizes(cfg)
+    with tempfile.TemporaryDirectory() as d:
+        writer = storage.ShardWriter(d, stream.num_vertices,
+                                     stream.num_blocks, meta=stream.meta())
+        for i in writer.missing():
+            writer.write_block(i, *stream.block(i))
+        assert writer.edges_written == e
+        src, dst, man = storage.read_shards(d)
+        assert len(src) == e and sum(man["counts"].values()) == e
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(0, 127),
+       st.integers(0, 100))
+@SETTINGS
+def test_cfree_hash_python_mirror(t, ctr, seed):
+    """hash_int (the serial-oracle python mirror) agrees with the jitted
+    cfree_hash word-for-word on arbitrary (t, ctr)."""
+    from repro.core import cfree as cfree_lib
+    cfg = cfree_lib.CFreeConfig(model="ba_cfree", vertices=4, ba_degree=1,
+                                seed=seed)
+    w0, w1, _, _ = (int(w) for w in np.asarray(cfree_lib.cfree_words(cfg)))
+    jax_val = int(np.asarray(cfree_lib.cfree_hash(
+        cfree_lib.cfree_words(cfg), jnp.uint32(t), ctr)))
+    assert jax_val == cfree_lib.hash_int(w0, w1, t, ctr)
+
+
 @given(st.lists(st.integers(0, 9), min_size=1, max_size=200))
 @SETTINGS
 def test_occurrence_rank_property(vals):
